@@ -1,0 +1,68 @@
+"""Table 8 + Fig 8a/b: Workload Scheduler ablations and the prompt- /
+runtime-reusing feature analysis."""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import fmt, save_result, table
+from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, make_system
+
+ABLATIONS = {
+    "full": {},
+    "w/o warm allocator": {"use_warm_allocator": False},
+    "w/o DelaySchedulable": {"use_delay": False},
+    "w/o latency budget": {"use_latency_budget": False},
+}
+
+FEATURES = {
+    "P.R.+R.R.": {},
+    "w/o P.R.": {"use_bank": False},
+    "w/o R.R.": {"use_warm": False},
+    "w/o both": {"use_bank": False, "use_warm": False},
+}
+
+
+def _run(cfg_kw: Dict, S: float = 1.0, seeds: int = 3,
+         minutes: int = 20) -> Dict:
+    agg = {"slo_violation_pct": 0.0, "cost_usd": 0.0}
+    for sd in range(seeds):
+        jobs = generate_trace(TraceConfig(load="medium", slo_emergence=S,
+                                          seed=sd, minutes=minutes))
+        res = make_system("prompttuner",
+                          SimConfig(max_gpus=32, **cfg_kw)).run(
+            clone_jobs(jobs)).summary()
+        agg["slo_violation_pct"] += res["slo_violation_pct"] / seeds
+        agg["cost_usd"] += res["cost_usd"] / seeds
+    return agg
+
+
+def run(quick: bool = False) -> Dict:
+    seeds = 1 if quick else 3
+    minutes = 10 if quick else 20
+    out = {"table8": {}, "fig8ab": {}}
+    for name, kw in ABLATIONS.items():
+        out["table8"][name] = _run(kw, seeds=seeds, minutes=minutes)
+    rows = [[n, fmt(r["slo_violation_pct"], 1), fmt(r["cost_usd"], 1)]
+            for n, r in out["table8"].items()]
+    print(table("Table 8 — scheduler ablations (medium load, S=1.0)",
+                ["variant", "viol %", "cost $"], rows))
+
+    for S in (0.5, 1.0, 1.5):
+        out["fig8ab"][str(S)] = {
+            name: _run(kw, S=S, seeds=seeds, minutes=minutes)
+            for name, kw in FEATURES.items()
+        }
+    rows = []
+    for S, r in out["fig8ab"].items():
+        rows.append([S] + [fmt(r[n]["slo_violation_pct"], 1)
+                           for n in FEATURES]
+                    + [fmt(r[n]["cost_usd"], 0) for n in FEATURES])
+    print(table("Fig 8a/b — prompt/runtime reusing (viol % | cost $)",
+                ["S"] + [f"viol {n}" for n in FEATURES]
+                + [f"$ {n}" for n in FEATURES], rows))
+    save_result("ablation", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

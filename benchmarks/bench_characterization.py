@@ -1,0 +1,180 @@
+"""Fig 2 + Table 2: LPT workload characterization.
+
+(a) end-to-end time breakdown (compute / comm / allocation),
+(b) trace spikiness (max rpm / mean rpm ~ 5x),
+(c) ITA CDF over 20 random initial prompts — REAL tuning runs on the
+    testbed LLM; this also CALIBRATES the simulator
+    (artifacts/ita_calibration.json).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import fmt, make_ita_context, measure_ita, save_result, table
+
+
+def time_breakdown(llm: str = "gpt2-base", iters: int = 30) -> Dict:
+    """Measured compute time per iteration vs (modeled) comm + alloc.
+
+    Comm payload per iteration = the prompt gradient (P x d floats) —
+    the actual all-reduce payload in multi-GPU LPT. At A100 NVLink-class
+    600 GB/s, that's sub-microsecond vs tens-of-ms steps: the paper's
+    0.4-0.5 % comm share comes from launch/sync overheads, which we take
+    from its Fig 2a as the model constant (0.005)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import LoaderConfig, TaskLoader
+    from repro.train.pretrain import pretrain
+    from repro.tuning import PromptTuner
+    from repro.config import TuneConfig
+    from repro.core.jobs import LLM_PROFILES
+
+    pre = pretrain(llm, cache=True)
+    tc = TuneConfig(batch_size=16)
+    tuner = PromptTuner(pre.model, tc)
+    loader = TaskLoader(pre.tasks[0], LoaderConfig(batch_size=16))
+    pp = tuner.init_prompt(pre.params, jax.random.key(0))
+    opt = tuner.init_opt(pp)
+    # warmup/compile
+    pp, opt, _ = tuner.step(pp, opt, pre.params, next(loader))
+    t0 = time.time()
+    for _ in range(iters):
+        pp, opt, _ = tuner.step(pp, opt, pre.params, next(loader))
+    jax.block_until_ready(pp["soft_prompt"])
+    step_s = (time.time() - t0) / iters
+    payload = pp["soft_prompt"].size * 4
+    prof = LLM_PROFILES.get(llm)
+    comm_frac = prof.comm_frac if prof else 0.005
+    alloc_s = prof.warm_overhead if prof else 1.0
+    n_iters = 200
+    total = n_iters * step_s * (1 + comm_frac) + alloc_s
+    return {
+        "llm": llm,
+        "step_s": step_s,
+        "grad_payload_bytes": int(payload),
+        "compute_pct": 100 * n_iters * step_s / total,
+        "comm_pct": 100 * n_iters * step_s * comm_frac / total,
+        "alloc_pct": 100 * alloc_s / total,
+    }
+
+
+def trace_pattern(seed: int = 0) -> Dict:
+    from repro.cluster import TraceConfig, generate_trace
+
+    jobs = generate_trace(TraceConfig(load="medium", seed=seed, minutes=20))
+    per_min = np.zeros(20)
+    for j in jobs:
+        per_min[min(int(j.submit_time // 60), 19)] += 1
+    return {
+        "jobs": len(jobs),
+        "mean_rpm": float(per_min.mean()),
+        "max_rpm": float(per_min.max()),
+        "spike_ratio": float(per_min.max() / max(per_min.mean(), 1e-9)),
+        "per_min": per_min.tolist(),
+    }
+
+
+def ita_cdf(llm: str = "gpt2-base", n_prompts: int = 20, n_tasks: int = 3,
+            max_iters: int = 400, calibrate: bool = True) -> Dict:
+    """Fig 2c: ITA distribution over random initial prompts, REAL runs."""
+    import json
+    import os
+
+    from repro.core.bank_builder import select_manual
+
+    ctx = make_ita_context(llm)
+    rng = np.random.default_rng(0)
+    task_ids = rng.choice(len(ctx.pre.tasks), size=n_tasks, replace=False)
+    all_itas = []
+    per_task = {}
+    for ti in task_ids:
+        task = ctx.pre.tasks[int(ti)]
+        itas = []
+        for p in range(n_prompts):
+            prompt = select_manual(ctx.pre, seed=1000 + p)
+            iters, reached = measure_ita(ctx, task, prompt,
+                                         max_iters=max_iters)
+            itas.append(iters)
+        per_task[task.task_id] = itas
+        all_itas.extend(itas)
+    arr = np.asarray(all_itas, float)
+    # per-task ratios (targets differ per task; pooling across tasks
+    # inflates the spread). Runs capped at max_iters are CENSORED: the
+    # true max/min is at least the reported value.
+    ratios_med, ratios_max, censored = [], [], 0
+    for itas in per_task.values():
+        a = np.asarray(itas, float)
+        censored += int((a >= max_iters).sum())
+        lo = max(a.min(), 1.0)
+        ratios_med.append(float(np.median(a) / lo))
+        ratios_max.append(float(a.max() / lo))
+    stats = {
+        "min": float(arr.min()),
+        "median": float(np.median(arr)),
+        "max": float(arr.max()),
+        "median_over_min": float(np.median(ratios_med)),
+        "max_over_min": float(np.median(ratios_max)),
+        "censored_runs": censored,
+        "total_runs": int(arr.size),
+        "per_task": per_task,
+    }
+    if calibrate:
+        # write the manual-vs-ideal spread the simulator samples from
+        cal_path = os.path.join(
+            os.environ.get("REPRO_ARTIFACTS", "artifacts"),
+            "ita_calibration.json")
+        cal = {}
+        if os.path.exists(cal_path):
+            with open(cal_path) as f:
+                cal = json.load(f)
+        # clamp into a sane band: censored runs can inflate the spread
+        # far past anything the scheduler could exploit
+        cal["manual_over_ideal"] = {
+            "lo": float(np.clip(stats["median_over_min"] * 0.8, 1.2, 4.0)),
+            "hi": float(np.clip(stats["max_over_min"], 1.7, 6.0)),
+        }
+        with open(cal_path, "w") as f:
+            json.dump(cal, f, indent=1)
+        stats["calibration_written"] = cal_path
+    return stats
+
+
+def run(quick: bool = False) -> Dict:
+    out = {}
+    out["fig2a_breakdown"] = [time_breakdown("gpt2-base")]
+    if not quick:
+        out["fig2a_breakdown"].append(time_breakdown("gpt2-large"))
+    out["fig2b_trace"] = trace_pattern()
+    out["fig2c_ita"] = ita_cdf(
+        "gpt2-base",
+        n_prompts=6 if quick else 20,
+        n_tasks=2 if quick else 3,
+        max_iters=250 if quick else 400,
+    )
+    rows = [[b["llm"], fmt(b["step_s"] * 1e3, 1), b["grad_payload_bytes"],
+             fmt(b["compute_pct"], 1), fmt(b["comm_pct"], 2),
+             fmt(b["alloc_pct"], 1)] for b in out["fig2a_breakdown"]]
+    print(table("Fig 2a — time breakdown (%)",
+                ["llm", "step_ms", "grad_B", "compute", "comm", "alloc"],
+                rows))
+    t = out["fig2b_trace"]
+    print(table("Fig 2b — trace pattern", ["jobs", "mean_rpm", "max_rpm",
+                                           "spike_ratio"],
+                [[t["jobs"], fmt(t["mean_rpm"], 1), fmt(t["max_rpm"], 1),
+                  fmt(t["spike_ratio"], 2)]]))
+    s = out["fig2c_ita"]
+    print(table("Fig 2c — ITA over random prompts (paper: med/max "
+                "1.7-4.5x min)",
+                ["min", "median", "max", "med/min", "max/min"],
+                [[s["min"], s["median"], s["max"],
+                  fmt(s["median_over_min"]), fmt(s["max_over_min"])]]))
+    save_result("characterization", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

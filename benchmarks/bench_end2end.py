@@ -1,0 +1,83 @@
+"""Fig 7: end-to-end SLO violation + cost vs load (a, b) and vs SLO
+emergence S (c, d), PromptTuner vs INFless vs ElasticFlow."""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import fmt, save_result, table
+from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, make_system
+
+SYSTEMS = ("prompttuner", "infless", "elasticflow")
+
+
+def run_point(load: str, S: float, *, gpus: int = 32, seed: int = 0,
+              minutes: int = 20, seeds: int = 3) -> Dict[str, Dict]:
+    out: Dict[str, Dict] = {s: {"slo_violation_pct": 0.0, "cost_usd": 0.0}
+                            for s in SYSTEMS}
+    for sd in range(seeds):
+        jobs = generate_trace(TraceConfig(load=load, slo_emergence=S,
+                                          seed=seed + sd, minutes=minutes))
+        for name in SYSTEMS:
+            res = make_system(name, SimConfig(max_gpus=gpus)).run(
+                clone_jobs(jobs)).summary()
+            out[name]["slo_violation_pct"] += res["slo_violation_pct"] / seeds
+            out[name]["cost_usd"] += res["cost_usd"] / seeds
+    return out
+
+
+def run(quick: bool = False) -> Dict:
+    minutes = 10 if quick else 20
+    seeds = 2 if quick else 3
+    out = {"vs_load": {}, "vs_emergence": {}}
+    for load in ("low", "medium", "high"):
+        out["vs_load"][load] = run_point(load, 1.0, minutes=minutes,
+                                         seeds=seeds)
+    for S in (0.5, 1.0, 1.5):
+        out["vs_emergence"][str(S)] = run_point("medium", S,
+                                                minutes=minutes, seeds=seeds)
+
+    rows = []
+    for load, r in out["vs_load"].items():
+        rows.append([load] + [fmt(r[s]["slo_violation_pct"], 1)
+                              for s in SYSTEMS]
+                    + [fmt(r[s]["cost_usd"]) for s in SYSTEMS])
+    print(table("Fig 7a/b — SLO violation (%) and cost ($) vs load",
+                ["load", "PT viol", "INF viol", "EF viol",
+                 "PT $", "INF $", "EF $"], rows))
+    rows = []
+    for S, r in out["vs_emergence"].items():
+        rows.append([S] + [fmt(r[s]["slo_violation_pct"], 1)
+                           for s in SYSTEMS]
+                    + [fmt(r[s]["cost_usd"]) for s in SYSTEMS])
+    print(table("Fig 7c/d — SLO violation (%) and cost ($) vs emergence S",
+                ["S", "PT viol", "INF viol", "EF viol",
+                 "PT $", "INF $", "EF $"], rows))
+
+    # headline ratios (paper: up to 4.0x/7.9x violation, 1.6x/4.5x cost)
+    worst = out["vs_emergence"]["0.5"]
+    pt = worst["prompttuner"]
+    out["headline"] = {
+        "viol_reduction_vs_infless": (worst["infless"]["slo_violation_pct"]
+                                      / max(pt["slo_violation_pct"], 0.1)),
+        "viol_reduction_vs_elasticflow": (
+            worst["elasticflow"]["slo_violation_pct"]
+            / max(pt["slo_violation_pct"], 0.1)),
+        "cost_reduction_vs_infless": (worst["infless"]["cost_usd"]
+                                      / max(pt["cost_usd"], 1e-6)),
+        "cost_reduction_vs_elasticflow": (worst["elasticflow"]["cost_usd"]
+                                          / max(pt["cost_usd"], 1e-6)),
+    }
+    h = out["headline"]
+    print(table("Headline ratios @ S=0.5 (paper: 4.0x / 7.9x viol; "
+                "1.6x / 4.5x cost)",
+                ["viol vs INF", "viol vs EF", "cost vs INF", "cost vs EF"],
+                [[fmt(h["viol_reduction_vs_infless"]),
+                  fmt(h["viol_reduction_vs_elasticflow"]),
+                  fmt(h["cost_reduction_vs_infless"]),
+                  fmt(h["cost_reduction_vs_elasticflow"])]]))
+    save_result("end2end", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Table 7: heavy workloads — LLaMA-30B and Qwen7B-R1 (4-GPU tensor-
+parallel replicas) on 32 GPUs, plus the 96-GPU large-scale run."""
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import fmt, save_result, table
+from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, make_system
+
+SYSTEMS = ("prompttuner", "infless", "elasticflow")
+
+
+def run_setting(load: str, gpus: int, scale: float = 1.0, seeds: int = 3,
+                minutes: int = 20) -> Dict[str, Dict]:
+    out = {s: {"slo_violation_pct": 0.0, "cost_usd": 0.0} for s in SYSTEMS}
+    for sd in range(seeds):
+        jobs = generate_trace(TraceConfig(load=load, slo_emergence=1.0,
+                                          seed=sd, minutes=minutes,
+                                          scale=scale))
+        for name in SYSTEMS:
+            res = make_system(name, SimConfig(max_gpus=gpus)).run(
+                clone_jobs(jobs)).summary()
+            out[name]["slo_violation_pct"] += res["slo_violation_pct"] / seeds
+            out[name]["cost_usd"] += res["cost_usd"] / seeds
+    return out
+
+
+def run(quick: bool = False) -> Dict:
+    seeds = 1 if quick else 3
+    minutes = 10 if quick else 20
+    out = {
+        "llama-30b": run_setting("llama-30b", 32, seeds=seeds,
+                                 minutes=minutes),
+        "qwen7b-r1": run_setting("qwen7b-r1", 32, seeds=seeds,
+                                 minutes=minutes),
+        # large-scale: 96 GPUs, medium loads scaled 3x (§6.2 Scalability)
+        "large-scale": run_setting("medium", 96, scale=3.0, seeds=seeds,
+                                   minutes=minutes),
+    }
+    rows = []
+    for setting, r in out.items():
+        rows.append([setting]
+                    + [fmt(r[s]["slo_violation_pct"], 1) for s in SYSTEMS]
+                    + [fmt(r[s]["cost_usd"], 1) for s in SYSTEMS])
+    print(table("Table 7 — heavy workloads (viol % | cost $)",
+                ["setting", "PT viol", "INF viol", "EF viol",
+                 "PT $", "INF $", "EF $"], rows))
+    save_result("heavy", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Fig 3: inefficiencies of existing systems.
+
+(a) ElasticFlow cluster utilization over time (static pool waste),
+(b) INFless instance-init share of end-to-end latency (CDF),
+(c) SLO violation vs maximum GPUs for both baselines.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import fmt, save_result, table
+from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, make_system
+
+
+def run(quick: bool = False) -> Dict:
+    minutes = 10 if quick else 20
+    jobs = generate_trace(TraceConfig(load="medium", seed=0,
+                                      minutes=minutes))
+    out: Dict = {}
+
+    # (a) ElasticFlow utilization: busy GPUs / provisioned
+    ef = make_system("elasticflow", SimConfig(max_gpus=32))
+    res = ef.run(clone_jobs(jobs))
+    util = [100.0 * busy / 32 for t, busy in res.util_samples
+            if t < minutes * 60]
+    out["fig3a_util"] = {
+        "mean_util_pct": float(np.mean(util)),
+        "p90_util_pct": float(np.percentile(util, 90)),
+    }
+
+    # (b) INFless: init share of end-to-end latency
+    inf = make_system("infless", SimConfig(max_gpus=32))
+    res = inf.run(clone_jobs(jobs))
+    shares = []
+    for r in res.records:
+        if np.isfinite(r.finish) and r.finish > r.job.submit_time:
+            e2e = r.finish - r.job.submit_time
+            shares.append(100.0 * (r.init_overhead + r.wait) / e2e)
+    out["fig3b_init_share"] = {
+        "mean_pct": float(np.mean(shares)),
+        "max_pct": float(np.percentile(shares, 99)),
+    }
+
+    # (c) violation vs fleet size
+    out["fig3c"] = {}
+    for gpus in (8, 16, 24, 32):
+        row = {}
+        for name in ("elasticflow", "infless", "prompttuner"):
+            r = make_system(name, SimConfig(max_gpus=gpus)).run(
+                clone_jobs(jobs)).summary()
+            row[name] = r["slo_violation_pct"]
+        out["fig3c"][str(gpus)] = row
+
+    print(table("Fig 3a — ElasticFlow utilization (paper: ~56 %)",
+                ["mean %", "p90 %"],
+                [[fmt(out["fig3a_util"]["mean_util_pct"], 1),
+                  fmt(out["fig3a_util"]["p90_util_pct"], 1)]]))
+    print(table("Fig 3b — INFless init+wait share of e2e latency "
+                "(paper: avg 11 %, up to 50 %)",
+                ["mean %", "p99 %"],
+                [[fmt(out["fig3b_init_share"]["mean_pct"], 1),
+                  fmt(out["fig3b_init_share"]["max_pct"], 1)]]))
+    rows = [[g, fmt(r["elasticflow"], 1), fmt(r["infless"], 1),
+             fmt(r["prompttuner"], 1)] for g, r in out["fig3c"].items()]
+    print(table("Fig 3c — SLO violation (%) vs max GPUs (paper: up to 70 %)",
+                ["gpus", "EF", "INF", "PT"], rows))
+    save_result("inefficiency", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,128 @@
+"""Shared benchmark machinery: result recording, tables, ITA measurement."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "artifacts/bench")
+
+
+def save_result(name: str, payload: Dict[str, Any]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def load_result(name: str) -> Optional[Dict[str, Any]]:
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return None
+
+
+def table(title: str, headers: List[str], rows: List[List[Any]]) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(headers)]
+    out = [f"== {title} =="]
+    out.append("  ".join(str(h).ljust(w) for h, w in zip(headers, widths)))
+    for r in rows:
+        out.append("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)
+
+
+def fmt(x, nd=2):
+    if isinstance(x, float):
+        return f"{x:.{nd}f}"
+    return x
+
+
+@dataclass
+class ITAContext:
+    """Everything needed to measure Iterations-To-Accuracy on the real
+    testbed: pretrained model + bank + per-task targets.
+
+    The bank used for a query task HOLDS OUT that task's own optimized
+    prompts (the paper's premise is transfer from prompts optimized for
+    *similar* tasks; the full bank would contain the answer verbatim and
+    trivialize ITA to zero)."""
+    llm: str
+    pre: Any
+    bank: Any
+    tune_cfg: Any
+    targets: Dict[str, float] = field(default_factory=dict)
+    _holdout: Dict[str, Any] = field(default_factory=dict)
+
+    def target_for(self, task) -> float:
+        """Target loss = near-convergence quality: the task's own
+        optimized prompt's score x 1.5 + 0.05 (every init must TUNE to
+        reach it; the paper's targets are likewise set so all evaluated
+        inits can reach them)."""
+        if task.task_id not in self.targets:
+            import jax.numpy as jnp
+
+            from repro.data import LoaderConfig, TaskLoader
+            from repro.tuning import PromptTuner
+            loader = TaskLoader(task, LoaderConfig(
+                batch_size=self.tune_cfg.batch_size))
+            tuner = PromptTuner(self.pre.model, self.tune_cfg)
+            own = tuner.score(
+                {"soft_prompt": jnp.asarray(
+                    self.pre.task_prompts[task.task_id])},
+                self.pre.params,
+                loader.eval_batch(self.tune_cfg.eval_samples))
+            self.targets[task.task_id] = float(own) * 1.5 + 0.05
+        return self.targets[task.task_id]
+
+    def bank_for(self, task):
+        """Sub-bank excluding the query task's own prompts + variants."""
+        if task.task_id not in self._holdout:
+            from repro.core.prompt_bank import PromptBank
+            entries = [e for e in self.bank.entries
+                       if e.origin != "<evicted>"
+                       and not e.origin.startswith(task.task_id + "/")]
+            sub = PromptBank(capacity=self.bank.capacity,
+                             num_clusters=self.bank.num_clusters,
+                             seed=self.bank.seed)
+            sub.add_candidates(entries)
+            sub.build()
+            self._holdout[task.task_id] = sub
+        return self._holdout[task.task_id]
+
+
+def make_ita_context(llm: str, tune_cfg=None, num_clusters: int = 48,
+                     variants: int = 4) -> ITAContext:
+    from repro.config import TuneConfig
+    from repro.core.bank_builder import build_bank_from_pretrain
+    from repro.train.pretrain import pretrain
+
+    pre = pretrain(llm, cache=True)
+    bank = build_bank_from_pretrain(pre, variants_per_prompt=variants,
+                                    num_clusters=num_clusters)
+    return ITAContext(llm, pre, bank,
+                      tune_cfg or TuneConfig(lr=0.5, batch_size=16,
+                                             eval_every=5))
+
+
+def measure_ita(ctx: ITAContext, task, prompt, *, max_iters=400):
+    """Real tuning run until the task's target loss. Returns (iters,
+    reached)."""
+    import jax.numpy as jnp
+
+    from repro.data import LoaderConfig, TaskLoader
+    from repro.tuning import PromptTuner
+
+    loader = TaskLoader(task, LoaderConfig(
+        batch_size=ctx.tune_cfg.batch_size))
+    tuner = PromptTuner(ctx.pre.model, ctx.tune_cfg)
+    res = tuner.tune(ctx.pre.params, loader,
+                     {"soft_prompt": jnp.asarray(prompt)},
+                     target_loss=ctx.target_for(task), max_iters=max_iters)
+    return res["iters"], res["reached"]

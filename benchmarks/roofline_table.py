@@ -1,0 +1,72 @@
+"""§Roofline table renderer: reads artifacts/dryrun/*.jsonl (written by
+repro.launch.dryrun) and prints the per-(arch x shape x mesh) three-term
+roofline with dominant bottleneck and useful-FLOPs ratio."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import fmt, save_result, table
+
+DRYRUN_DIR = os.path.join(os.environ.get("REPRO_ARTIFACTS", "artifacts"),
+                          "dryrun")
+
+
+def load_records(mesh: str) -> List[Dict]:
+    path = os.path.join(DRYRUN_DIR, f"{mesh}.jsonl")
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            recs[(r["arch"], r["shape"])] = r   # last write wins
+    return list(recs.values())
+
+
+def rows_for(recs: List[Dict]) -> List[List]:
+    rows = []
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    for r in sorted(recs, key=lambda r: (r["arch"],
+                                         order.get(r["shape"], 9))):
+        if "error" in r:
+            rows.append([r["arch"], r["shape"], "ERROR", "", "", "", "", ""])
+            continue
+        t = r["roofline"]
+        m = r["memory"]
+        rows.append([
+            r["arch"], r["shape"],
+            fmt(t["compute_s"], 3), fmt(t["memory_s"], 3),
+            fmt(t["collective_s"], 3), t["dominant"],
+            fmt(r.get("useful_flops_ratio", 0.0), 2),
+            fmt((m.get("argument_size_in_bytes", 0)
+                 + m.get("temp_size_in_bytes", 0)) / 1e9, 1),
+        ])
+    return rows
+
+
+def run(quick: bool = False) -> Dict:
+    out = {}
+    for mesh in ("single", "multi"):
+        recs = load_records(mesh)
+        out[mesh] = {"n": len(recs),
+                     "errors": sum(1 for r in recs if "error" in r)}
+        if recs:
+            print(table(
+                f"§Roofline — {mesh} pod "
+                f"({'16x16' if mesh == 'single' else '2x16x16'}), "
+                "seconds per step",
+                ["arch", "shape", "comp", "mem", "coll", "dominant",
+                 "useful", "HBM GB/dev"],
+                rows_for(recs)))
+    save_result("roofline", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

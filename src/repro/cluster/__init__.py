@@ -1,0 +1,27 @@
+from repro.cluster.sim import ClusterSim, SimConfig, SimResult, JobRecord, WarmPool
+from repro.cluster.trace import (
+    clone_jobs,
+    LOADS,
+    HEAVY_LOADS,
+    TraceConfig,
+    generate_trace,
+    load_calibration,
+)
+from repro.cluster.baselines import ElasticFlowSim, INFlessSim, make_system
+
+__all__ = [
+    "ClusterSim",
+    "ElasticFlowSim",
+    "HEAVY_LOADS",
+    "INFlessSim",
+    "JobRecord",
+    "LOADS",
+    "SimConfig",
+    "SimResult",
+    "TraceConfig",
+    "WarmPool",
+    "clone_jobs",
+    "generate_trace",
+    "load_calibration",
+    "make_system",
+]

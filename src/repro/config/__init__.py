@@ -1,0 +1,29 @@
+from repro.config.base import (
+    EncDecConfig,
+    FrontendConfig,
+    HybridConfig,
+    INPUT_SHAPES,
+    InputShape,
+    MLAConfig,
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    RunConfig,
+    SSMConfig,
+    TuneConfig,
+)
+
+__all__ = [
+    "EncDecConfig",
+    "FrontendConfig",
+    "HybridConfig",
+    "INPUT_SHAPES",
+    "InputShape",
+    "MLAConfig",
+    "MeshConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "RunConfig",
+    "SSMConfig",
+    "TuneConfig",
+]

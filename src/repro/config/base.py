@@ -1,0 +1,184 @@
+"""Config system for repro.
+
+Dataclass-based, layered: ModelConfig (architecture), TuneConfig (LPT
+algorithm hyperparams), MeshConfig (distribution), RunConfig (driver).
+Every assigned architecture registers a ModelConfig factory in
+``repro.configs`` under its ``--arch`` id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration (GShard-style dispatch)."""
+    num_experts: int = 0                 # routed experts; 0 => dense FFN
+    top_k: int = 2
+    num_shared_experts: int = 0          # always-on experts (DeepSeek-style)
+    d_ff_expert: int = 0                 # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_aux_loss_weight: float = 0.001
+    # first N layers use a dense FFN instead of MoE (DeepSeek/Kimi style)
+    first_dense_layers: int = 1
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2)."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """State-space / linear-attention configuration."""
+    kind: str = "rwkv6"                  # "rwkv6" | "mamba2"
+    state_size: int = 64                 # per-head state dim (rwkv head dim / mamba d_state)
+    num_heads: int = 0                   # 0 => derived d_model // state_size
+    chunk_size: int = 128                # chunked-scan block length
+    expand: int = 2                      # mamba2 inner expansion
+    conv_width: int = 4                  # mamba2 short conv
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style hybrid: SSM backbone + shared attention block."""
+    attn_every: int = 6                  # apply the shared attention block every N ssm layers
+    shared_attn: bool = True             # single shared parameter set for all applications
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    """Encoder-decoder (Seamless-M4T style)."""
+    num_encoder_layers: int = 12
+    encoder_seq_len: int = 1024          # precomputed frame/patch embedding length
+    cross_attention: bool = True
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Modality frontend STUB: provides precomputed embeddings of the right
+    shape (mel+conv for audio; ViT patches for VLM). Per task spec the
+    frontend itself is not implemented — only its output interface."""
+    kind: str = "none"                   # "none" | "audio" | "vision"
+    num_embeddings: int = 0              # patches / frames prepended to text
+    embed_dim: int = 0                   # frontend output dim (projected to d_model)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    arch_type: str = "dense"             # dense | moe | ssm | hybrid | vlm | audio
+    source: str = ""                     # citation bracket from the assignment
+
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0                    # 0 => d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    max_seq_len: int = 4096
+
+    # attention family: "gqa" | "mla" | "none" (attention-free)
+    attention: str = "gqa"
+    mla: Optional[MLAConfig] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0              # 0 => full attention
+    # activation: "swiglu" | "gelu"
+    activation: str = "swiglu"
+    norm: str = "rmsnorm"                # "rmsnorm" | "layernorm"
+    parallel_block: bool = False         # command-r style parallel attn+ffn
+    tie_embeddings: bool = True
+    logit_soft_cap: float = 0.0
+
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    frontend: FrontendConfig = field(default_factory=FrontendConfig)
+
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    remat: bool = True                   # checkpoint each block in training
+    # shard activations over (batch x SEQUENCE) instead of batch-only:
+    # context parallelism for archs whose head counts don't divide the
+    # model axis (phi3: 40 heads vs 16-way mesh -> replicated attention)
+    seq_shard: bool = False
+
+    def kv_heads(self) -> int:
+        return self.num_kv_heads or self.num_heads
+
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Prompt-tuning / job / distribution / run configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TuneConfig:
+    """LPT algorithm hyperparameters (Table 3 'Hyperparam')."""
+    algorithm: str = "soft_prompt"       # "soft_prompt" | "prefix"
+    prompt_len: int = 16                 # tunable virtual tokens
+    lr: float = 0.3
+    weight_decay: float = 0.0
+    optimizer: str = "adam"
+    batch_size: int = 8
+    max_iters: int = 400
+    eval_every: int = 10
+    eval_samples: int = 16               # Eqn-1 evaluation set size
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+    multi_pod: bool = False
+
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axis_names if a in ("pod", "data"))
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """Assigned input shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                            # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    arch: str = "gpt2-base"
+    shape: str = "train_4k"
+    steps: int = 100
+    microbatches: int = 1                # grad-accumulation factor
+    log_every: int = 10
+    checkpoint_dir: str = ""
+    seed: int = 0

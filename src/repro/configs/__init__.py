@@ -1,0 +1,121 @@
+"""Architecture registry: ``get_config(arch_id)`` returns the FULL assigned
+configuration; ``smoke_config(arch_id)`` returns a reduced variant of the
+same family (<=2-4 layers, d_model<=512, <=4 experts) for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, List
+
+from repro.config import ModelConfig, MoEConfig, SSMConfig
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+_MODULES = [
+    "gpt2_base",
+    "gpt2_large",
+    "vicuna_7b",
+    "rwkv6_7b",
+    "seamless_m4t_medium",
+    "paligemma_3b",
+    "deepseek_v2_236b",
+    "phi3_medium_14b",
+    "zamba2_7b",
+    "command_r_plus_104b",
+    "qwen2_7b",
+    "internlm2_20b",
+    "kimi_k2_1t_a32b",
+]
+
+ASSIGNED_ARCHS: List[str] = [
+    "rwkv6-7b",
+    "seamless-m4t-medium",
+    "paligemma-3b",
+    "deepseek-v2-236b",
+    "phi3-medium-14b",
+    "zamba2-7b",
+    "command-r-plus-104b",
+    "qwen2-7b",
+    "internlm2-20b",
+    "kimi-k2-1t-a32b",
+]
+
+PAPER_ARCHS: List[str] = ["gpt2-base", "gpt2-large", "vicuna-7b"]
+
+
+def register(fn: Callable[[], ModelConfig]) -> Callable[[], ModelConfig]:
+    cfg = fn()
+    _REGISTRY[cfg.name] = fn
+    return fn
+
+
+def _ensure_loaded() -> None:
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    _ensure_loaded()
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch]()
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family variant: 2-4 layers, d_model<=512, <=4 experts."""
+    cfg = get_config(arch)
+    kw: dict = dict(
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=min(cfg.kv_heads(), 2),
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        max_seq_len=256,
+        num_layers=2,
+        dtype="float32",
+        param_dtype="float32",
+        remat=False,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=4,
+            top_k=2,
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+            d_ff_expert=128,
+            first_dense_layers=min(cfg.moe.first_dense_layers, 1),
+        )
+        kw["num_layers"] = 3  # 1 dense + 2 moe
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(
+            cfg.ssm, state_size=32, num_heads=0, chunk_size=16, expand=2
+        )
+        kw["num_heads"] = 8 if cfg.arch_type == "ssm" else 4  # rwkv: d/state
+    if cfg.hybrid is not None:
+        kw["num_layers"] = 5
+        kw["hybrid"] = dataclasses.replace(cfg.hybrid, attn_every=2)
+    if cfg.encdec is not None:
+        kw["encdec"] = dataclasses.replace(
+            cfg.encdec, num_encoder_layers=2, encoder_seq_len=16
+        )
+    if cfg.frontend.kind != "none":
+        kw["frontend"] = dataclasses.replace(
+            cfg.frontend, num_embeddings=8, embed_dim=48
+        )
+    if cfg.mla is not None:
+        kw["mla"] = dataclasses.replace(
+            cfg.mla,
+            kv_lora_rank=64,
+            q_lora_rank=48,
+            qk_nope_head_dim=32,
+            qk_rope_head_dim=16,
+            v_head_dim=32,
+        )
+    return cfg.with_overrides(**kw)

@@ -1,0 +1,23 @@
+"""GPT2-Base — paper's own evaluation model [Brown et al. / Radford et al.]."""
+from repro.config import ModelConfig
+from repro.configs import register
+
+
+@register
+def gpt2_base() -> ModelConfig:
+    return ModelConfig(
+        name="gpt2-base",
+        arch_type="dense",
+        source="[18] GPT-2; paper §6.1",
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        d_ff=3072,
+        vocab_size=50257,
+        max_seq_len=1024,
+        norm="layernorm",
+        activation="gelu",
+        qkv_bias=True,
+        tie_embeddings=True,
+    )

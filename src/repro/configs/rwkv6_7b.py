@@ -1,0 +1,24 @@
+"""RWKV6 'Finch' 7B — attention-free, data-dependent decay [arXiv:2404.05892]."""
+from repro.config import ModelConfig, SSMConfig
+from repro.configs import register
+
+
+@register
+def rwkv6_7b() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-7b",
+        arch_type="ssm",
+        source="Finch — data-dependent decay [arXiv:2404.05892]",
+        num_layers=32,
+        d_model=4096,
+        num_heads=64,            # 4096 / state_size 64
+        num_kv_heads=64,
+        d_ff=14336,
+        vocab_size=65536,
+        max_seq_len=1 << 20,     # recurrent: unbounded context
+        attention="none",
+        ssm=SSMConfig(kind="rwkv6", state_size=64, chunk_size=128),
+        norm="rmsnorm",
+        activation="swiglu",
+        tie_embeddings=False,
+    )

@@ -1,0 +1,26 @@
+from repro.data.synthetic import (
+    BOS,
+    FAMILIES,
+    PAD,
+    SEP,
+    TaskSpec,
+    batch_to_jnp,
+    make_tasks,
+    sample_batch,
+    task_similarity,
+)
+from repro.data.pipeline import LoaderConfig, TaskLoader
+
+__all__ = [
+    "BOS",
+    "FAMILIES",
+    "LoaderConfig",
+    "PAD",
+    "SEP",
+    "TaskLoader",
+    "TaskSpec",
+    "batch_to_jnp",
+    "make_tasks",
+    "sample_batch",
+    "task_similarity",
+]

@@ -1,0 +1,142 @@
+"""Synthetic task families — the stand-in for the paper's 12 datasets
+(Table 6: dialog, QA, text generation, summarization, story generation).
+
+Each family is a parameterized seq2seq transformation over a small token
+alphabet; family parameters play the role of dataset *partitions* (the
+paper splits each dataset into 10 exclusive partitions -> 120 tasks).
+Tasks within a family are *similar* — exactly the structure the Prompt
+Bank exploits (prompts optimized for one partition transfer to others).
+
+Sequence layout handed to the model:   [ input .. SEP target .. ]
+labels[t] = token the model should predict at position t (pre-shifted);
+mask = 1 on the target region only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD, SEP, BOS = 0, 1, 2
+N_SPECIAL = 3
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    family: str
+    param: int            # partition parameter (e.g. shift amount)
+    vocab: int            # data alphabet size (excl. specials)
+    input_len: int = 8
+    target_len: int = 8
+
+    @property
+    def task_id(self) -> str:
+        return f"{self.family}:{self.param}"
+
+
+def _alphabet(spec: TaskSpec):
+    return N_SPECIAL, spec.vocab
+
+
+def _apply_family(family: str, param: int, x: np.ndarray, vocab: int) -> np.ndarray:
+    """x: (B, L) ints in [0, vocab). Returns the target sequence.
+
+    All 12 families are *prompt-conditioned (near-)local transforms*:
+    y_i depends on x at a fixed relative offset plus a per-task vocabulary
+    map. A 2-layer testbed LLM learns these within a few thousand
+    multitask steps (one fixed-offset attention pattern + a prompt-gated
+    token map) — which is what lets the ITA / prompt-sensitivity
+    experiments run end-to-end on CPU. Within a family, nearby ``param``
+    values yield similar tasks: the transfer structure the Prompt Bank
+    exploits (§4.1 insight 1).
+    """
+    L = x.shape[1]
+    pos = np.arange(L)[None, :]
+    if family == "copy":                        # identity, tiny rotation
+        return (x + (param % 3)) % vocab
+    if family == "shift":                       # add param+3 mod vocab
+        return (x + param + 3) % vocab
+    if family == "negate":                      # mirror alphabet with offset
+        return (vocab - 1 - x + param) % vocab
+    if family == "mul":                         # odd multiplier => bijection
+        return (x * (2 * param + 3)) % vocab
+    if family == "affine":                      # 3x + odd offset
+        return (3 * x + 2 * param + 1) % vocab
+    if family == "xor":                         # bitwise xor (vocab power of 2)
+        assert vocab & (vocab - 1) == 0, "xor family needs power-of-2 vocab"
+        return x ^ ((param + 1) % vocab)
+    if family == "bitrev":                      # reverse bits, then + param
+        nbits = int(np.log2(vocab))
+        y = np.zeros_like(x)
+        for b in range(nbits):
+            y |= ((x >> b) & 1) << (nbits - 1 - b)
+        return (y + param) % vocab
+    if family == "parity_swap":                 # +-(param+1) by token parity
+        return np.where(x % 2 == 0, x + param + 1, x - param - 1) % vocab
+    if family == "add_pos":                     # + position + param
+        return (x + pos + param) % vocab
+    if family == "alt_shift":                   # +p at even positions, -p at odd
+        return (x + np.where(pos % 2 == 0, param + 1, -(param + 1))) % vocab
+    if family == "prev":                        # y_i = x_{i-1} + p (y_0 = x_0 + p)
+        y = np.concatenate([x[:, :1], x[:, :-1]], axis=1)
+        return (y + param) % vocab
+    if family == "next":                        # y_i = x_{i+1} + p (y_L = x_L + p)
+        y = np.concatenate([x[:, 1:], x[:, -1:]], axis=1)
+        return (y + param) % vocab
+    raise ValueError(family)
+
+
+FAMILIES: List[str] = [
+    "copy", "shift", "negate", "mul", "affine", "xor",
+    "bitrev", "parity_swap", "add_pos", "alt_shift", "prev", "next",
+]
+
+
+def make_tasks(
+    vocab: int = 32, partitions: int = 10, input_len: int = 8, target_len: int = 8
+) -> List[TaskSpec]:
+    """The paper's 12 datasets x 10 partitions -> 120 tasks."""
+    return [
+        TaskSpec(f, p, vocab, input_len, target_len)
+        for f in FAMILIES
+        for p in range(partitions)
+    ]
+
+
+def sample_batch(spec: TaskSpec, rng: np.random.Generator, batch: int) -> Dict:
+    """Returns {"tokens", "labels", "mask"} np arrays for the LPT loss."""
+    off, vocab = _alphabet(spec)
+    x = rng.integers(0, vocab, size=(batch, spec.input_len))
+    y = _apply_family(spec.family, spec.param, x, vocab)[:, : spec.target_len]
+    # layout: BOS x.. SEP y..  ; predict y tokens (shifted by one)
+    inp = np.concatenate(
+        [
+            np.full((batch, 1), BOS),
+            x + off,
+            np.full((batch, 1), SEP),
+            y + off,
+        ],
+        axis=1,
+    ).astype(np.int32)
+    tokens = inp[:, :-1]
+    labels = inp[:, 1:].copy()
+    mask = np.zeros_like(labels, dtype=np.float32)
+    tgt_start = 1 + spec.input_len  # position of SEP in tokens; predicts y0
+    mask[:, tgt_start:] = 1.0
+    return {"tokens": tokens, "labels": labels, "mask": mask}
+
+
+def batch_to_jnp(batch: Dict) -> Dict:
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+def task_similarity(a: TaskSpec, b: TaskSpec) -> float:
+    """Crude structural similarity (used only for trace construction /
+    sanity checks — the Prompt Bank itself uses activation features)."""
+    if a.family != b.family:
+        return 0.0
+    return 1.0 / (1.0 + abs(a.param - b.param))

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  score_ce.py        — fused Eqn-1 scoring CE (Prompt Bank hot spot)
+  flash_attention.py — GQA flash attention (causal / sliding window / cache)
+  rwkv_wkv.py        — RWKV6 chunked WKV scan (data-dependent decay)
+
+Each kernel has a pure-jnp oracle in ref.py and model-layout wrappers in
+ops.py; tests sweep shapes/dtypes against the oracles (interpret=True on
+CPU, Mosaic on real TPUs).
+"""
+from repro.kernels.ops import fused_score_ce, gqa_flash, wkv
+
+__all__ = ["fused_score_ce", "gqa_flash", "wkv"]

@@ -1,0 +1,130 @@
+"""Flash attention (GQA, causal / sliding-window, KV-cache aware).
+
+Online-softmax attention that streams KV tiles through VMEM — the
+(S, L) score matrix never reaches HBM. This is the TPU-native fix for
+the dominant memory-roofline term found in the dry-run baselines (the
+XLA blockwise path in ``repro.models.attention`` spills per-block score
+tensors to HBM between fusions).
+
+Layout (head-major so each grid cell owns one (batch, head) pair):
+  q (B, H,  S, hd)     k,v (B, Hkv, L, hd)     GQA: kv head = h // (H//Hkv)
+Grid (B, H, nq, nk): the KV tile index is the minor (fastest) dimension;
+VMEM scratch carries (m, l, acc) across KV tiles of one q tile.
+
+Masking is positional: q row i has absolute position ``q_offset + i``
+(soft prompt / frontend tokens shift query positions), KV column j has
+position j; ``kv_len`` (dynamic, SMEM) marks the valid cache prefix.
+
+TPU sizing: default tiles bq = bk = 512, hd <= 256: live set
+q (512, hd) + k/v (512, hd) + scores (512, 512) f32 ~= 2.3 MB at
+hd = 128 bf16 — comfortably inside VMEM, MXU dims 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale, causal, window, q_offset, bq, bk):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                   # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                             # (bq, bk)
+
+    qpos = q_offset + iq * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = kpos < kvlen_ref[0]
+    if causal:
+        ok &= kpos <= qpos
+    if window and window > 0:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret"),
+)
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    kv_len=None, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, bq: int = 512, bk: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,H,S,hd); k,v: (B,Hkv,L,hd) -> (B,H,S,hd).
+
+    ``kv_len``: dynamic valid-cache length (defaults to L)."""
+    B, H, S, hd = q.shape
+    Hkv, L = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    G = H // Hkv
+    bq = min(bq, S)
+    bk = min(bk, L)
+    qpad, kpad = (-S) % bq, (-L) % bk
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+    Sp, Lp = S + qpad, L + kpad
+    if kv_len is None:
+        kv_len = L
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    grid = (B, H, Sp // bq, Lp // bk)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=1.0 / (hd ** 0.5), causal=causal, window=window,
+            q_offset=q_offset, bq=bq, bk=bk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),        # kv_len (1,)
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),               # running max
+            pltpu.VMEM((bq,), jnp.float32),               # running sum
+            pltpu.VMEM((bq, hd), jnp.float32),            # accumulator
+        ],
+        interpret=interpret,
+    )(kv_len, q, k, v)
+    return out[:, :, :S]

@@ -1,0 +1,70 @@
+"""Jit'd wrappers around the Pallas kernels, in MODEL layouts.
+
+On CPU (this container) the kernels execute with ``interpret=True``;
+on TPU they compile to Mosaic. ``INTERPRET`` is resolved once from the
+backend so callers never pass it explicitly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv_wkv import rwkv6_wkv
+from repro.kernels.score_ce import score_ce
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_score_ce(hidden, emb, labels, mask, *, bt: int = 256,
+                   bv: int = 512):
+    """Eqn-1 scoring in model layout: hidden (B,S,d), labels/mask (B,S).
+
+    Returns (mean_loss, per_example (B,)). The vocab tile is shrunk to a
+    divisor of V rather than padding the embedding (padded vocab rows
+    would distort the logsumexp)."""
+    B, S, d = hidden.shape
+    V = emb.shape[0]
+    # pick the largest tile <= bv that divides V (V here is always a
+    # multiple of 128 for the assigned archs; testbed vocabs are small)
+    while V % bv != 0:
+        bv //= 2
+        if bv < 8:
+            bv = V          # fall back: single tile
+            break
+    nll = score_ce(hidden.reshape(B * S, d), emb, labels.reshape(-1),
+                   bt=bt, bv=bv, interpret=_interpret())
+    nll = nll.reshape(B, S) * mask
+    tok = jnp.maximum(mask.sum(axis=-1), 1.0)
+    per_ex = nll.sum(axis=-1) / tok
+    mean = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return mean, per_ex
+
+
+def gqa_flash(q, k, v, *, causal=True, window=0, q_offset=0, kv_len=None,
+              bq: int = 512, bk: int = 512):
+    """Model layout adapter: q (B,S,H,hd), k/v (B,L,Hkv,hd) ->
+    (B,S,H,hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          q_offset=q_offset, kv_len=kv_len, bq=bq, bk=bk,
+                          interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+def wkv(r, k, v, logw, u, state, *, chunk: int = 128):
+    """Model layout adapter: r/k/v/logw (B,H,T,hd), u (H,hd),
+    state (B,H,hd,hd) -> (y (B,H,T,hd), state')."""
+    B, H, T, hd = r.shape
+    fl = lambda t: t.reshape(B * H, T, hd)
+    uu = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    s0 = state.reshape(B * H, hd, hd)
+    y, s = rwkv6_wkv(fl(r), fl(k), fl(v), fl(logw), uu, s0, chunk=chunk,
+                     interpret=_interpret())
+    return y.reshape(B, H, T, hd), s.reshape(B, H, hd, hd)

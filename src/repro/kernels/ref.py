@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def score_ce_ref(hidden: jax.Array, emb: jax.Array,
+                 labels: jax.Array) -> jax.Array:
+    """Per-token NLL (T,) f32: full-logits log-softmax gather."""
+    logits = (hidden.astype(jnp.float32) @
+              emb.astype(jnp.float32).T)                  # (T, V)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return logz - gold
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0,
+                        kv_len=None):
+    """q: (B,H,S,hd); k,v: (B,Hkv,L,hd). GQA by head-group mapping.
+    q position i attends to kv position j iff
+        j <= q_offset + i               (causal)
+        j >  q_offset + i - window      (sliding window, if window > 0)
+        j <  kv_len                     (cache validity, if given)
+    Returns (B,H,S,hd) in q.dtype."""
+    B, H, S, hd = q.shape
+    Hkv, L = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, S, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgsd,bhld->bhgsl", qf, kf) / jnp.sqrt(hd)
+    qpos = q_offset + jnp.arange(S)
+    kpos = jnp.arange(L)
+    mask = jnp.ones((S, L), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window and window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_len is not None:
+        mask &= (kpos < kv_len)[None, :]
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgsl,bhld->bhgsd", probs, vf)
+    return out.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def rwkv6_wkv_ref(r, k, v, logw, u, state0):
+    """Sequential WKV recurrence (the exact semantics the chunked kernel
+    must reproduce).
+
+    r,k,v,logw: (BH, T, hd) f32 (logw <= 0); u: (BH, hd);
+    state0: (BH, hd, hd) [key-dim x value-dim].
+    Returns (y (BH, T, hd), state (BH, hd, hd)):
+        y_t   = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+        S_t   = diag(exp(logw_t)) S_{t-1} + k_t v_t^T
+    """
+    def step(s, xs):
+        rt, kt, vt, wt = xs                               # (BH, hd)
+        kv = kt[:, :, None] * vt[:, None, :]              # (BH, hd, hd)
+        y = jnp.einsum("bd,bde->be", rt, s + u[:, :, None] * kv)
+        s = jnp.exp(wt)[:, :, None] * s + kv
+        return s, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, logw))  # (T, BH, hd)
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1), state

@@ -1,0 +1,19 @@
+# NOTE: repro.launch.dryrun must be imported FIRST (it sets XLA_FLAGS for
+# the 512-device host platform) when doing dry-runs; import it directly as
+# `python -m repro.launch.dryrun`. This package init deliberately imports
+# nothing that touches jax device state.
+from repro.launch.mesh import (
+    cache_partition_specs,
+    data_axes,
+    make_debug_mesh,
+    make_production_mesh,
+    model_axis_size,
+)
+
+__all__ = [
+    "cache_partition_specs",
+    "data_axes",
+    "make_debug_mesh",
+    "make_production_mesh",
+    "model_axis_size",
+]

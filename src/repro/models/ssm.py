@@ -1,0 +1,329 @@
+"""State-space / linear-attention blocks: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both use a *chunked* parallel scan: within a chunk the token-vs-token decay
+matrix is materialized (all exponents are <= 0, so this is numerically
+safe), across chunks a recurrent state is carried with ``jax.lax.scan``.
+This is the TPU-native mapping of the papers' CUDA scan kernels: the
+intra-chunk work is MXU matmuls, the sequential dependency is only at
+chunk granularity.
+
+State layouts:
+  rwkv6:  S (B, H, hd, hd)  + token-shift x_prev (B, d_model)
+  mamba2: h (B, H, d_state, head_dim) + conv ring (B, conv_w-1, d_conv_ch)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.common import ParamSpec, maybe_model, rms_norm
+
+TIME_MIX_DIM = 32
+DECAY_LORA_DIM = 64
+
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+
+def rwkv6_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    hd = cfg.ssm.state_size
+    H = cfg.ssm.num_heads or cfg.d_model // hd
+    return H, hd
+
+
+def rwkv6_params(cfg: ModelConfig, model_axis: int) -> Dict:
+    d = cfg.d_model
+    H, hd = rwkv6_dims(cfg)
+    da = H * hd
+    mh = maybe_model(H, model_axis)
+    return {
+        # data-dependent token-shift (ddlerp) mixing
+        "mu_x": ParamSpec((d,), P(), "small"),
+        "mu_rkvwg": ParamSpec((5, d), P(), "small"),
+        "tm_w1": ParamSpec((d, 5 * TIME_MIX_DIM), P(), "small"),
+        "tm_w2": ParamSpec((5, TIME_MIX_DIM, d), P(), "small"),
+        # projections
+        "wr": ParamSpec((d, H, hd), P(None, mh, None)),
+        "wk": ParamSpec((d, H, hd), P(None, mh, None)),
+        "wv": ParamSpec((d, H, hd), P(None, mh, None)),
+        "wg": ParamSpec((d, da), P(None, maybe_model(da, model_axis))),
+        "wo": ParamSpec((H, hd, d), P(mh, None, None)),
+        # data-dependent decay
+        "w0": ParamSpec((H, hd), P(mh, None), "decay", dtype="float32"),
+        "decay_w1": ParamSpec((d, DECAY_LORA_DIM), P(), "small"),
+        "decay_w2": ParamSpec((DECAY_LORA_DIM, H, hd), P(None, mh, None), "small"),
+        # per-channel current-token bonus
+        "u": ParamSpec((H, hd), P(mh, None), "small", dtype="float32"),
+        "ln_out": ParamSpec((H, hd), P(mh, None), "ones", dtype="float32"),
+    }
+
+
+def _rwkv6_inputs(cfg, p, x, x_prev):
+    """ddlerp token shift -> r,k,v,g,logw. x: (B,S,d); x_prev: (B,d)."""
+    B, S, d = x.shape
+    H, hd = rwkv6_dims(cfg)
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    xx = shifted - x
+    xxx = x + xx * p["mu_x"]
+    lora = jnp.tanh(xxx @ p["tm_w1"]).reshape(B, S, 5, TIME_MIX_DIM)
+    mixes = p["mu_rkvwg"] + jnp.einsum("bstm,tmd->bstd", lora, p["tm_w2"])
+    xr, xk, xv, xw, xg = [x + xx * mixes[:, :, i] for i in range(5)]
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["wr"])
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["wv"])
+    g = jax.nn.silu(xg @ p["wg"]).reshape(B, S, H, hd)
+    dw = jnp.einsum("bsl,lhk->bshk", jnp.tanh(xw @ p["decay_w1"]), p["decay_w2"])
+    logw = -jnp.exp((p["w0"] + dw).astype(jnp.float32))            # (B,S,H,hd) <= 0
+    logw = jnp.maximum(logw, -12.0)
+    return r, k, v, g, logw
+
+
+def _rwkv6_chunk(r, k, v, logw, u, state):
+    """One chunk. r/k/v: (B,H,Lc,hd) f32; logw: same (<=0); u: (H,hd);
+    state: (B,H,hd,hd) [k-dim x v-dim]. Returns y, new_state."""
+    B, H, Lc, hd = r.shape
+    c = jnp.cumsum(logw, axis=2)                                   # inclusive
+    b = c - logw                                                   # exclusive
+    # decay matrix D[i,j,d] = exp(b_i - c_j) for j<i; u for j==i; 0 for j>i
+    diff = b[:, :, :, None, :] - c[:, :, None, :, :]               # (B,H,Lc,Lc,hd)
+    ii = jnp.arange(Lc)
+    lower = (ii[:, None] > ii[None, :])[None, None, :, :, None]
+    diag = (ii[:, None] == ii[None, :])[None, None, :, :, None]
+    D = jnp.where(lower, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    D = D + diag * u[None, :, None, None, :]
+    score = jnp.einsum("bhid,bhjd,bhijd->bhij", r, k, D)
+    y = jnp.einsum("bhij,bhje->bhie", score, v)
+    y = y + jnp.einsum("bhid,bhde->bhie", r * jnp.exp(b), state)
+    kd = k * jnp.exp(c[:, :, -1:, :] - c)                          # (B,H,Lc,hd)
+    state_new = jnp.exp(c[:, :, -1, :])[..., None] * state + jnp.einsum(
+        "bhjd,bhje->bhde", kd, v
+    )
+    return y, state_new
+
+
+def rwkv6_forward(cfg: ModelConfig, p: Dict, x: jax.Array, state=None):
+    """x: (B,S,d). Returns (y (B,S,d), state dict)."""
+    B, S, d = x.shape
+    H, hd = rwkv6_dims(cfg)
+    Lc = min(cfg.ssm.chunk_size, S)
+    if state is None:
+        state = rwkv6_init_state(cfg, B)
+    r, k, v, g, logw = _rwkv6_inputs(cfg, p, x, state["x_prev"])
+    # to (B,H,S,hd) f32
+    tr = lambda t: t.transpose(0, 2, 1, 3).astype(jnp.float32)
+    r_, k_, v_, w_ = tr(r), tr(k), tr(v), logw.transpose(0, 2, 1, 3)
+    nchunks = -(-S // Lc)
+    pad = nchunks * Lc - S
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r_, k_, v_ = zp(r_), zp(k_), zp(v_)
+        w_ = jnp.pad(w_, ((0, 0), (0, 0), (0, pad), (0, 0)))       # logw=0 => w=1, k=0
+    ch = lambda t: t.reshape(B, H, nchunks, Lc, hd).transpose(2, 0, 1, 3, 4)
+    u = p["u"].astype(jnp.float32)
+
+    def body(s, blk):
+        rc, kc, vc, wc = blk
+        y, s2 = _rwkv6_chunk(rc, kc, vc, wc, u, s)
+        return s2, y
+
+    s_final, ys = jax.lax.scan(body, state["s"].astype(jnp.float32),
+                               (ch(r_), ch(k_), ch(v_), ch(w_)))
+    # ys: (nchunks, B, H, Lc, hd) -> (B, H, S, hd)
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, nchunks * Lc, hd)[:, :, :S]
+    y = y.transpose(0, 2, 1, 3)                                    # (B,S,H,hd)
+    # per-head group norm, gate, output projection
+    y = rms_norm(y, jnp.ones((hd,), jnp.float32)) * p["ln_out"]
+    y = (y * g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    new_state = {"s": s_final.astype(jnp.float32), "x_prev": x[:, -1, :]}
+    return out, new_state
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int) -> Dict:
+    H, hd = rwkv6_dims(cfg)
+    return {
+        "s": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_prev": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+    }
+
+
+def rwkv6_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict):
+    """One-token step. x: (B,1,d)."""
+    B = x.shape[0]
+    H, hd = rwkv6_dims(cfg)
+    r, k, v, g, logw = _rwkv6_inputs(cfg, p, x, state["x_prev"])
+    r_, k_, v_ = (t[:, 0].astype(jnp.float32) for t in (r, k, v))  # (B,H,hd)
+    w = jnp.exp(logw[:, 0])                                        # (B,H,hd)
+    s = state["s"]
+    kv = jnp.einsum("bhd,bhe->bhde", k_, v_)
+    u = p["u"].astype(jnp.float32)
+    y = jnp.einsum("bhd,bhde->bhe", r_, s + u[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    y = rms_norm(y, jnp.ones((hd,), jnp.float32)) * p["ln_out"]
+    y = (y[:, None] * g.astype(jnp.float32)).astype(x.dtype)       # (B,1,H,hd)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    return out, {"s": s_new, "x_prev": x[:, -1, :]}
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+
+def mamba2_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm.expand * cfg.d_model
+    head_dim = 64
+    H = d_inner // head_dim
+    return d_inner, H, head_dim
+
+
+def mamba2_params(cfg: ModelConfig, model_axis: int) -> Dict:
+    d = cfg.d_model
+    ds = cfg.ssm.state_size
+    d_inner, H, hd = mamba2_dims(cfg)
+    conv_ch = d_inner + 2 * ds
+    mi = maybe_model(d_inner, model_axis)
+    mh = maybe_model(H, model_axis)
+    return {
+        "in_z": ParamSpec((d, d_inner), P(None, mi)),
+        "in_x": ParamSpec((d, d_inner), P(None, mi)),
+        "in_B": ParamSpec((d, ds), P()),
+        "in_C": ParamSpec((d, ds), P()),
+        "in_dt": ParamSpec((d, H), P(None, mh)),
+        "dt_bias": ParamSpec((H,), P(), "zeros", dtype="float32"),
+        "conv_w": ParamSpec((cfg.ssm.conv_width, conv_ch), P(), "small"),
+        "conv_b": ParamSpec((conv_ch,), P(), "zeros"),
+        "a_log": ParamSpec((H,), P(), "decay", dtype="float32"),
+        "d_skip": ParamSpec((H,), P(), "ones", dtype="float32"),
+        "norm_g": ParamSpec((d_inner,), P(mi), "ones", dtype="float32"),
+        "out": ParamSpec((d_inner, d), P(mi, None)),
+    }
+
+
+def _causal_conv(xBC, w, b, init_state=None):
+    """Depthwise causal conv. xBC: (B,S,C); w: (W,C). init_state: (B,W-1,C)."""
+    W = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[-1]), xBC.dtype)
+    xp = jnp.concatenate([init_state, xBC], axis=1)
+    out = sum(xp[:, i : i + xBC.shape[1], :] * w[i] for i in range(W))
+    tail = xp[:, -(W - 1) :, :]
+    return jax.nn.silu(out + b), tail
+
+
+def _mamba2_chunk(C, Bm, xh, dt, loglam, h0):
+    """One SSD chunk. C/Bm: (B,H,Lc,ds); xh: (B,H,Lc,hd); dt: (B,H,Lc);
+    loglam: (B,H,Lc) (<=0); h0: (B,H,ds,hd)."""
+    cum = jnp.cumsum(loglam, axis=2)
+    Lc = dt.shape[2]
+    ii = jnp.arange(Lc)
+    tri = (ii[:, None] >= ii[None, :])[None, None]
+    L = jnp.where(tri, jnp.exp(jnp.minimum(cum[:, :, :, None] - cum[:, :, None, :], 0.0)), 0.0)
+    score = jnp.einsum("bhin,bhjn->bhij", C, Bm) * L * dt[:, :, None, :]
+    y = jnp.einsum("bhij,bhjd->bhid", score, xh)
+    y = y + jnp.einsum("bhin,bhnd->bhid", C * jnp.exp(cum)[..., None], h0)
+    w = dt * jnp.exp(cum[:, :, -1:] - cum)
+    h_new = jnp.exp(cum[:, :, -1])[..., None, None] * h0 + jnp.einsum(
+        "bhjn,bhjd->bhnd", Bm * w[..., None], xh
+    )
+    return y, h_new
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int) -> Dict:
+    ds = cfg.ssm.state_size
+    d_inner, H, hd = mamba2_dims(cfg)
+    conv_ch = d_inner + 2 * ds
+    return {
+        "h": jnp.zeros((batch, H, ds, hd), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_ch), jnp.dtype(cfg.dtype)),
+    }
+
+
+def _mamba2_proj(cfg, p, x):
+    z = x @ p["in_z"]
+    xBC = jnp.concatenate([x @ p["in_x"], x @ p["in_B"], x @ p["in_C"]], axis=-1)
+    dt = jax.nn.softplus((x @ p["in_dt"]).astype(jnp.float32) + p["dt_bias"])
+    return z, xBC, dt
+
+
+def _mamba2_split(cfg, xBC):
+    ds = cfg.ssm.state_size
+    d_inner, H, hd = mamba2_dims(cfg)
+    xh = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner : d_inner + ds]
+    C = xBC[..., d_inner + ds :]
+    return xh, Bm, C
+
+
+def mamba2_forward(cfg: ModelConfig, p: Dict, x: jax.Array, state=None):
+    B, S, d = x.shape
+    ds = cfg.ssm.state_size
+    d_inner, H, hd = mamba2_dims(cfg)
+    Lc = min(cfg.ssm.chunk_size, S)
+    if state is None:
+        state = mamba2_init_state(cfg, B)
+    z, xBC, dt = _mamba2_proj(cfg, p, x)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], state["conv"])
+    xh, Bm, C = _mamba2_split(cfg, xBC)
+    a = -jnp.exp(p["a_log"])                                       # (H,) < 0
+    loglam = dt * a                                                # (B,S,H)
+
+    nchunks = -(-S // Lc)
+    pad = nchunks * Lc - S
+    xh4 = xh.reshape(B, S, H, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    Bm4 = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, ds)).transpose(0, 2, 1, 3).astype(jnp.float32)
+    C4 = jnp.broadcast_to(C[:, :, None, :], (B, S, H, ds)).transpose(0, 2, 1, 3).astype(jnp.float32)
+    dt4 = dt.transpose(0, 2, 1)
+    ll4 = loglam.transpose(0, 2, 1)
+    if pad:
+        zp4 = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        zp3 = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad)))
+        xh4, Bm4, C4 = zp4(xh4), zp4(Bm4), zp4(C4)
+        dt4, ll4 = zp3(dt4), zp3(ll4)
+    ch4 = lambda t: t.reshape(B, H, nchunks, Lc, t.shape[-1]).transpose(2, 0, 1, 3, 4)
+    ch3 = lambda t: t.reshape(B, H, nchunks, Lc).transpose(2, 0, 1, 3)
+
+    def body(h, blk):
+        Cc, Bc, xc, dtc, llc = blk
+        y, h2 = _mamba2_chunk(Cc, Bc, xc, dtc, llc, h)
+        return h2, y
+
+    h_final, ys = jax.lax.scan(
+        body, state["h"], (ch4(C4), ch4(Bm4), ch4(xh4), ch3(dt4), ch3(ll4))
+    )
+    # ys: (nchunks, B, H, Lc, hd) -> (B, H, S, hd)
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, nchunks * Lc, hd)[:, :, :S]
+    y = y + p["d_skip"][None, :, None, None] * xh4[:, :, :S]
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_g"]).astype(x.dtype)
+    out = y @ p["out"]
+    return out, {"h": h_final, "conv": conv_state}
+
+
+def mamba2_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict):
+    """One-token step. x: (B,1,d)."""
+    B = x.shape[0]
+    ds = cfg.ssm.state_size
+    d_inner, H, hd = mamba2_dims(cfg)
+    z, xBC, dt = _mamba2_proj(cfg, p, x)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], state["conv"])
+    xh, Bm, C = _mamba2_split(cfg, xBC)
+    xh = xh[:, 0].reshape(B, H, hd).astype(jnp.float32)
+    Bm = Bm[:, 0].astype(jnp.float32)
+    C = C[:, 0].astype(jnp.float32)
+    dt1 = dt[:, 0]                                                 # (B,H)
+    a = -jnp.exp(p["a_log"])
+    lam = jnp.exp(dt1 * a)                                         # (B,H)
+    h = state["h"] * lam[..., None, None] + jnp.einsum(
+        "bn,bhd->bhnd", Bm, xh * dt1[..., None]
+    )
+    y = jnp.einsum("bn,bhnd->bhd", C, h) + p["d_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm_g"]).astype(x.dtype)
+    return y @ p["out"], {"h": h, "conv": conv_state}

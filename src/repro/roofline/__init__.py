@@ -1,0 +1,23 @@
+from repro.roofline.extract import (
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    active_params,
+    collective_bytes_from_hlo,
+    cost_summary,
+    memory_summary,
+    model_flops,
+    roofline_terms,
+)
+
+__all__ = [
+    "HBM_BW",
+    "LINK_BW",
+    "PEAK_FLOPS",
+    "active_params",
+    "collective_bytes_from_hlo",
+    "cost_summary",
+    "memory_summary",
+    "model_flops",
+    "roofline_terms",
+]

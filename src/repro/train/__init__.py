@@ -1,0 +1,22 @@
+from repro.train.optimizer import (
+    Optimizer,
+    OptState,
+    adam,
+    apply_updates,
+    cosine_schedule,
+    make_optimizer,
+    sgd,
+)
+from repro.train.objectives import lpt_loss, token_cross_entropy
+
+__all__ = [
+    "Optimizer",
+    "OptState",
+    "adam",
+    "apply_updates",
+    "cosine_schedule",
+    "lpt_loss",
+    "make_optimizer",
+    "sgd",
+    "token_cross_entropy",
+]

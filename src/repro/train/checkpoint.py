@@ -1,0 +1,63 @@
+"""Pytree checkpointing to .npz (no external deps).
+
+Trees are flattened to path-keyed arrays; restore rebuilds the nested dict.
+Used for the pretrained base models, optimized prompt banks, and training
+state. A tiny manifest records step and metadata.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else k))
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: Dict[str, Any] = {}
+    for path, arr in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return root
+
+
+def save_checkpoint(path: str, tree, step: int = 0, meta: Optional[Dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    np.savez_compressed(path, **flat)
+    manifest = {"step": step, "meta": meta or {}, "keys": sorted(flat)}
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, as_jax: bool = True) -> Tuple[Any, Dict]:
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    tree = _unflatten({k: data[k] for k in data.files})
+    if as_jax:
+        import jax.numpy as jnp
+
+        tree = jax.tree.map(jnp.asarray, tree)
+    manifest = {}
+    mpath = (path if path.endswith(".npz") else path + ".npz") + ".json"
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+    return tree, manifest
+
+
+def checkpoint_exists(path: str) -> bool:
+    return os.path.exists(path if path.endswith(".npz") else path + ".npz")

@@ -1,0 +1,94 @@
+"""Loss functions for LPT: masked next-token cross-entropy (Eqn 1's L)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def token_cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array):
+    """logits: (B,S,V) f32; labels: (B,S) int32; mask: (B,S) {0,1}.
+
+    Returns (mean_loss, per_example_loss (B,)). Mean is over masked tokens.
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    per_ex = nll.sum(axis=-1) / jnp.maximum(mask.sum(axis=-1), 1.0)
+    return nll.sum() / denom, per_ex
+
+
+def chunked_token_cross_entropy(
+    model, params, hidden, labels, mask, *, chunk: int = 512
+):
+    """Sequence-chunked CE: never materializes the full (B,S,V) logits.
+
+    The unembedding projection + logsumexp + gold gather run one sequence
+    chunk at a time under ``jax.lax.scan``; with a vocab-sharded embedding
+    the per-device live set is (B/dp, chunk, V/mp) — the production-scale
+    loss path (the Pallas ``score_ce`` kernel is its fused TPU twin; this
+    is also the kernel's reference semantics).
+
+    hidden: (B,S,d); labels/mask: (B,S). Returns (mean_loss, per_example).
+    """
+    from repro.models.common import unembed  # local import: avoid cycle
+
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk != 0:                        # pad to a chunk multiple
+        pad = chunk - S % chunk
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        S = S + pad
+    nc = S // chunk
+    hc = hidden.reshape(B, nc, chunk, d).swapaxes(0, 1)      # (nc,B,c,d)
+    lc = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        nll_sum, tok_sum = carry
+        h, lab, msk = xs
+        logits = unembed(model.cfg, params, h)               # (B,c,V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * msk
+        return (nll_sum + nll.sum(axis=-1), tok_sum + msk.sum(axis=-1)), None
+
+    init = (jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32))
+    (nll_sum, tok_sum), _ = jax.lax.scan(body, init, (hc, lc, mc))
+    per_ex = nll_sum / jnp.maximum(tok_sum, 1.0)
+    mean = nll_sum.sum() / jnp.maximum(tok_sum.sum(), 1.0)
+    return mean, per_ex
+
+
+def lpt_loss_chunked(model, params, prompt, batch, *, chunk: int = 512):
+    """Production LPT loss: backbone forward + chunked CE over the token
+    region. Same semantics as :func:`lpt_loss` up to summation order."""
+    frontend = batch.get("frontend")
+    hidden, aux = model.backbone(
+        params, batch["tokens"], prompt=prompt, frontend=frontend
+    )
+    S = batch["tokens"].shape[1]
+    h = hidden[:, -S:, :]
+    loss, per_ex = chunked_token_cross_entropy(
+        model, params, h, batch["labels"], batch["mask"], chunk=chunk
+    )
+    return loss + aux.get("aux_loss", 0.0), (loss, per_ex)
+
+
+def lpt_loss(model, params, prompt, batch, prompt_len: int):
+    """Loss of the model with a soft prompt prepended (the LPT objective).
+
+    batch: {"tokens": (B,S), "labels": (B,S), "mask": (B,S)}. The prompt
+    occupies positions [F, F+P); logits for the token region are shifted
+    back out before the CE.
+    """
+    frontend = batch.get("frontend")
+    logits, aux = model.forward(
+        params, batch["tokens"], prompt=prompt, frontend=frontend
+    )
+    S = batch["tokens"].shape[1]
+    tok_logits = logits[:, -S:, :]
+    loss, per_ex = token_cross_entropy(tok_logits, batch["labels"], batch["mask"])
+    return loss + aux.get("aux_loss", 0.0), (loss, per_ex)

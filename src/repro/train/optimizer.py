@@ -1,0 +1,111 @@
+"""Pure-JAX optimizers (Adam/AdamW/SGD) and LR schedules.
+
+Minimal optax-like interface: ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``; updates are ADDED to
+params. Works on arbitrary pytrees (used for prompt-only parameter trees
+in LPT, and whole-model trees in the training substrate tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], Tuple[Any, OptState]]
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def adam(
+    lr: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params) -> OptState:
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params),
+                        _zeros_like_f32(params))
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, OptState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params) -> OptState:
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params), None)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        if momentum:
+            mu = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads
+            )
+        else:
+            mu = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        updates = jax.tree.map(lambda m, p: (-lr * m).astype(p.dtype), mu, params)
+        return updates, OptState(step, mu if momentum else state.mu, None)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def make_optimizer(name: str, lr, weight_decay: float = 0.0) -> Optimizer:
+    if name == "adam":
+        return adam(lr, weight_decay=weight_decay)
+    if name == "adamw":
+        return adam(lr, weight_decay=weight_decay or 0.01)
+    if name == "sgd":
+        return sgd(lr if not callable(lr) else 0.1)
+    raise ValueError(name)

@@ -1,0 +1,155 @@
+"""Multi-task pretraining of the tiny testbed LLMs.
+
+The paper uses pretrained GPT2/Vicuna checkpoints; offline we create the
+analogous artifact by jointly training (model weights + a per-task prompt
+table) on a mixture of synthetic task families. After this phase, a
+*prompt prefix determines the task* — which is precisely the property
+prompt tuning exploits — and the optimized per-task prompts seed the
+Prompt Bank with genuinely high-quality candidates.
+
+Artifacts are cached under ``artifacts/`` so tests and benchmarks re-use
+them instead of re-training.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, TuneConfig
+from repro.data import LoaderConfig, TaskLoader, TaskSpec, batch_to_jnp, make_tasks
+from repro.models import Model, build_model
+from repro.train.checkpoint import checkpoint_exists, load_checkpoint, save_checkpoint
+from repro.train.objectives import lpt_loss
+from repro.train.optimizer import adam, apply_updates
+
+ARTIFACT_DIR = os.environ.get("REPRO_ARTIFACTS", "artifacts")
+
+
+def testbed_config(name: str = "gpt2-base") -> ModelConfig:
+    """Tiny CPU-trainable stand-ins for the paper's three LLMs; sizes are
+    ordered like GPT2-Base < GPT2-Large < Vicuna-7B so relative results
+    (e.g. Fig 9's per-LLM ITA speedups) are structurally comparable."""
+    base = dict(
+        arch_type="dense", num_kv_heads=2, head_dim=32, vocab_size=48,
+        max_seq_len=128, norm="rmsnorm", activation="swiglu",
+        dtype="float32", param_dtype="float32", remat=False,
+    )
+    sizes = {
+        "gpt2-base": dict(num_layers=2, d_model=128, num_heads=4, d_ff=256),
+        "gpt2-large": dict(num_layers=3, d_model=160, num_heads=4, d_ff=320),
+        "vicuna-7b": dict(num_layers=4, d_model=192, num_heads=4, d_ff=384),
+    }
+    return ModelConfig(name=f"testbed-{name}", **base, **sizes[name])
+
+
+@dataclass
+class PretrainResult:
+    model: Model
+    params: Dict
+    task_prompts: Dict[str, np.ndarray]   # task_id -> (P, d) optimized prompt
+    tasks: List[TaskSpec]
+
+
+# deeper testbed models need longer to cross the prompt-conditioning
+# phase transition (measured: vicuna-7b converges ~16-24k steps)
+DEFAULT_STEPS = {"gpt2-base": 8000, "gpt2-large": 8000, "vicuna-7b": 24000}
+
+
+def pretrain(
+    llm: str = "gpt2-base",
+    *,
+    steps: int = 0,
+    prompt_len: int = 8,
+    batch_size: int = 32,
+    partitions: int = 4,
+    seed: int = 0,
+    cache: bool = True,
+    verbose: bool = False,
+) -> PretrainResult:
+    steps = steps or DEFAULT_STEPS.get(llm, 8000)
+    cfg = testbed_config(llm)
+    model = build_model(cfg)
+    tasks = make_tasks(vocab=32, partitions=partitions)
+    path = os.path.join(ARTIFACT_DIR, f"pretrain_{llm}_s{steps}_p{partitions}.npz")
+
+    if cache and checkpoint_exists(path):
+        tree, manifest = load_checkpoint(path)
+        params = tree["params"]
+        table = np.asarray(tree["prompt_table"])
+        prompts = {t.task_id: table[i] for i, t in enumerate(tasks)}
+        return PretrainResult(model, params, prompts, tasks)
+
+    key = jax.random.key(seed)
+    n_tasks = len(tasks)
+    d = cfg.d_model
+    # warm-start from the largest smaller-step artifact of this run
+    prev_path, prev_steps = None, 0
+    if cache and os.path.isdir(ARTIFACT_DIR):
+        import glob
+        import re
+        for f in glob.glob(os.path.join(
+                ARTIFACT_DIR, f"pretrain_{llm}_s*_p{partitions}.npz")):
+            m = re.search(r"_s(\d+)_p", f)
+            if m and prev_steps < int(m.group(1)) < steps:
+                prev_steps, prev_path = int(m.group(1)), f
+    if prev_path is not None:
+        tree, _ = load_checkpoint(prev_path)
+        params = tree["params"]
+        prompt_table = jnp.asarray(tree["prompt_table"])
+        if verbose:
+            print(f"[pretrain {llm}] warm start from s{prev_steps}")
+    else:
+        params = model.init(key)
+        prompt_table = (
+            jax.random.normal(jax.random.fold_in(key, 1),
+                              (n_tasks, prompt_len, d))
+            * (0.5 / np.sqrt(d))
+        ).astype(jnp.float32)
+    steps_to_run = steps - prev_steps
+
+    from repro.train.optimizer import cosine_schedule
+    opt = adam(cosine_schedule(2e-3, min(200, steps_to_run), steps_to_run))
+    state = opt.init({"params": params, "prompts": prompt_table})
+
+    def loss_fn(trainable, task_idx, batch):
+        prompt = trainable["prompts"][task_idx]
+        tot, (loss, _) = lpt_loss(model, trainable["params"], prompt, batch, prompt_len)
+        return tot
+
+    @jax.jit
+    def step(trainable, opt_state, task_idx, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(trainable, task_idx, batch)
+        updates, opt_state = opt.update(grads, opt_state, trainable)
+        return apply_updates(trainable, updates), opt_state, loss
+
+    rng = np.random.default_rng(seed)
+    loaders = [
+        TaskLoader(t, LoaderConfig(batch_size=batch_size, seed=seed)) for t in tasks
+    ]
+    trainable = {"params": params, "prompts": prompt_table}
+    t0 = time.time()
+    for it in range(steps_to_run):
+        ti = int(rng.integers(n_tasks))
+        batch = batch_to_jnp(next(loaders[ti]))
+        trainable, state, loss = step(trainable, state, jnp.int32(ti), batch)
+        if verbose and (it + 1) % 500 == 0:
+            print(f"[pretrain {llm}] step {it+1}/{steps_to_run} "
+                  f"loss {float(loss):.3f} ({time.time()-t0:.0f}s)")
+
+    params = trainable["params"]
+    table = np.asarray(trainable["prompts"])
+    if cache:
+        save_checkpoint(
+            path,
+            {"params": params, "prompt_table": table},
+            step=steps,
+            meta={"llm": llm, "tasks": [t.task_id for t in tasks]},
+        )
+    prompts = {t.task_id: table[i] for i, t in enumerate(tasks)}
+    return PretrainResult(model, params, prompts, tasks)

@@ -1,0 +1,13 @@
+from repro.tuning.soft_prompt import (
+    PromptTuner,
+    activation_features,
+    init_prompt_from_tokens,
+    init_prompt_random,
+)
+
+__all__ = [
+    "PromptTuner",
+    "activation_features",
+    "init_prompt_from_tokens",
+    "init_prompt_random",
+]

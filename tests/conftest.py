@@ -1,0 +1,24 @@
+import os
+import sys
+
+# tests must see ONE device (the dry-run sets 512 itself, in its own proc)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+from repro.train.pretrain import pretrain
+
+
+@pytest.fixture(scope="session")
+def pre_base():
+    """Pretrained testbed artifact (cached under artifacts/)."""
+    return pretrain("gpt2-base", cache=True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

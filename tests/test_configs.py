@@ -1,0 +1,71 @@
+"""Config registry: every assigned architecture resolves with the exact
+assignment numbers; smoke variants respect the reduction bounds."""
+import pytest
+
+from repro.config import INPUT_SHAPES
+from repro.configs import ASSIGNED_ARCHS, PAPER_ARCHS, get_config, smoke_config
+
+EXPECT = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "rwkv6-7b": (32, 4096, 0, 0, 14336, 65536),
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+    "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+    "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+    "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_assigned_config_exact(arch):
+    cfg = get_config(arch)
+    L, d, H, kv, dff, V = EXPECT[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.vocab_size == V
+    if cfg.arch_type == "ssm":
+        assert cfg.attention == "none" or cfg.ssm is not None
+        assert cfg.d_ff == dff
+    elif cfg.moe is not None:
+        assert cfg.moe.d_ff_expert == dff
+        assert cfg.num_heads == H and cfg.kv_heads() == kv
+    else:
+        assert cfg.d_ff == dff
+        assert cfg.num_heads == H and cfg.kv_heads() == kv
+    assert cfg.source, "every config must cite its source"
+
+
+def test_moe_details():
+    ds = get_config("deepseek-v2-236b")
+    assert ds.moe.num_experts == 160 and ds.moe.top_k == 6
+    assert ds.moe.num_shared_experts == 2
+    assert ds.attention == "mla" and ds.mla.kv_lora_rank == 512
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.moe.num_experts == 384 and kimi.moe.top_k == 8
+
+
+def test_hybrid_details():
+    z = get_config("zamba2-7b")
+    assert z.arch_type == "hybrid" and z.ssm.state_size == 64
+    assert z.hybrid.shared_attn
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS + PAPER_ARCHS)
+def test_smoke_reduction_bounds(arch):
+    cfg = smoke_config(arch)
+    assert cfg.num_layers <= 5
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    assert cfg.arch_type == get_config(arch).arch_type   # same family
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["decode_32k"].kind == "decode"
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288

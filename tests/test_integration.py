@@ -1,0 +1,61 @@
+"""Integration tests: the dry-run driver end-to-end (subprocess, 512
+host devices) and the simulator benchmark paths."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("seamless-m4t-medium", "decode_32k"),
+    ("qwen2-7b", "long_500k"),
+])
+def test_dryrun_subprocess(arch, shape, tmp_path):
+    """dryrun.py must lower+compile a full-size config on the 16x16 mesh
+    and emit a complete record (own process: it forces 512 devices)."""
+    out = os.path.join(tmp_path, "rec.jsonl")
+    env = dict(ENV)
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", out],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.loads(open(out).read().strip())
+    assert rec["n_devices"] == 256
+    assert rec["roofline"]["dominant"] in ("compute", "memory",
+                                           "collective")
+    assert rec["hlo_cost"]["flops"] > 0
+    assert rec["memory"]["argument_size_in_bytes"] > 0
+
+
+def test_bench_end2end_quick():
+    import benchmarks.bench_end2end as b
+    out = b.run_point("low", 1.0, gpus=16, minutes=3, seeds=1)
+    assert set(out) == {"prompttuner", "infless", "elasticflow"}
+    for r in out.values():
+        assert r["cost_usd"] > 0
+
+
+def test_bench_ablation_direction():
+    """The warm-allocator ablation must not IMPROVE SLO attainment."""
+    import benchmarks.bench_ablation as b
+    full = b._run({}, seeds=1, minutes=5)
+    no_alloc = b._run({"use_warm_allocator": False}, seeds=1, minutes=5)
+    assert (no_alloc["slo_violation_pct"]
+            >= full["slo_violation_pct"] - 1.0)
+
+
+def test_roofline_table_renders():
+    import benchmarks.roofline_table as rt
+    recs = rt.load_records("single")
+    if not recs:
+        pytest.skip("no dry-run artifacts yet")
+    rows = rt.rows_for(recs)
+    assert len(rows) == len(recs)
+    assert all(len(r) == 8 for r in rows)

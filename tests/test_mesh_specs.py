@@ -1,0 +1,88 @@
+"""Sharding-spec construction logic (pure, mesh duck-typed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+
+
+class FakeMesh:
+    """Duck-typed mesh: only axis_names and shape are consulted by the
+    spec builders."""
+
+    def __init__(self, shape: dict):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_data_axes():
+    assert mesh_lib.data_axes(SINGLE) == ("data",)
+    assert mesh_lib.data_axes(MULTI) == ("pod", "data")
+
+
+def test_batch_spec_divisible():
+    assert mesh_lib.batch_spec(SINGLE, 256, 2) == P("data", None)
+    assert mesh_lib.batch_spec(MULTI, 256, 2) == P(("pod", "data"), None)
+
+
+def test_batch_spec_falls_back_to_sequence():
+    # batch=1 can't shard; the 512k sequence dim takes the data axes
+    spec = mesh_lib.batch_spec(SINGLE, 1, 2, seq_dim=1, seq_len=524288)
+    assert spec == P(None, "data")
+    spec = mesh_lib.batch_spec(MULTI, 1, 2, seq_dim=1, seq_len=524288)
+    assert spec == P(None, ("pod", "data"))
+
+
+def test_batch_spec_indivisible_stays_replicated():
+    assert mesh_lib.batch_spec(SINGLE, 3, 2) == P(None, None)
+
+
+def test_cache_specs_kv_layout():
+    # (layers, B, L, Hkv, hd): B over data, heads over model if divisible
+    cache = {"kv": jax.ShapeDtypeStruct((28, 128, 32768, 16, 128),
+                                        jnp.bfloat16)}
+    specs = mesh_lib.cache_partition_specs(cache, SINGLE)
+    assert specs["kv"] == P(None, "data", None, "model", None)
+
+
+def test_cache_specs_head_indivisible_uses_hd():
+    cache = {"kv": jax.ShapeDtypeStruct((28, 128, 32768, 10, 128),
+                                        jnp.bfloat16)}
+    specs = mesh_lib.cache_partition_specs(cache, SINGLE)
+    assert specs["kv"] == P(None, "data", None, None, "model")
+
+
+def test_cache_specs_batch1_shards_length():
+    cache = {"kv": jax.ShapeDtypeStruct((28, 1, 524288, 16, 128),
+                                        jnp.bfloat16)}
+    specs = mesh_lib.cache_partition_specs(cache, SINGLE)
+    assert specs["kv"] == P(None, None, "data", "model", None)
+
+
+def test_production_mesh_requires_512_devices():
+    if len(jax.devices()) < 512:
+        with pytest.raises(Exception):
+            mesh_lib.make_production_mesh(multi_pod=True)
+
+
+def test_long_context_window_policy():
+    from repro.config import INPUT_SHAPES
+    from repro.configs import get_config
+    from repro.launch.steps import model_for_shape
+
+    phi = get_config("phi3-medium-14b")
+    long = INPUT_SHAPES["long_500k"]
+    assert model_for_shape(phi, long).sliding_window == 8192
+    # SSM archs keep their native recurrence (no window)
+    rwkv = get_config("rwkv6-7b")
+    assert model_for_shape(rwkv, long).sliding_window == 0
+    # MLA's compressed cache is already O(L): no window
+    ds = get_config("deepseek-v2-236b")
+    assert model_for_shape(ds, long).sliding_window == 0
+    # other shapes untouched
+    assert model_for_shape(phi, INPUT_SHAPES["train_4k"]).sliding_window == 0

@@ -1,0 +1,121 @@
+"""Prompt Bank (§4.3): two-layer structure invariants + behaviour."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prompt_bank import (
+    PromptBank,
+    PromptEntry,
+    cosine_distance,
+    k_medoids,
+)
+
+
+def _mk_bank(n=60, d=8, k=6, seed=0, capacity=3000):
+    rng = np.random.default_rng(seed)
+    # clustered features: `k` gaussian blobs
+    centers = rng.normal(size=(k, d))
+    entries = []
+    for i in range(n):
+        c = i % k
+        f = centers[c] + rng.normal(scale=0.05, size=d)
+        entries.append(PromptEntry(prompt=rng.normal(size=(4, 4)).astype(
+            np.float32), feature=f.astype(np.float32), origin=f"blob{c}/{i}"))
+    bank = PromptBank(capacity=capacity, num_clusters=k, seed=seed)
+    bank.add_candidates(entries)
+    bank.build()
+    return bank, centers
+
+
+def test_kmedoids_partitions_blobs():
+    bank, centers = _mk_bank()
+    # each cluster should be blob-pure (blobs are well separated)
+    for ci, members in enumerate(bank.clusters):
+        origins = {bank.entries[i].origin.split("/")[0] for i in members}
+        assert len(origins) == 1, f"cluster {ci} mixes blobs: {origins}"
+
+
+def test_kmedoids_medoid_is_member():
+    feats = np.random.default_rng(1).normal(size=(40, 6))
+    medoids, assign = k_medoids(feats, 5, seed=1)
+    assert len(set(medoids.tolist())) == 5
+    assert assign.shape == (40,)
+    for ci, m in enumerate(medoids):
+        assert assign[m] == ci          # a medoid belongs to its own cluster
+
+
+def test_lookup_matches_flat_when_scores_align_with_features():
+    """When the score function is smooth in feature space, the two-layer
+    lookup finds (near) the flat-search optimum with ~K + C/K evals."""
+    bank, centers = _mk_bank(n=80, k=8)
+    target = centers[3]
+
+    def score(e):
+        return float(np.linalg.norm(e.feature - target))
+
+    two = bank.lookup(score)
+    flat = bank.lookup_flat(score)
+    assert two.evaluations < flat.evaluations / 2
+    assert two.score <= flat.score * 1.05
+    assert two.entry.origin.split("/")[0] == "blob3"
+
+
+def test_lookup_evaluation_count():
+    bank, _ = _mk_bank(n=60, k=6)
+    res = bank.lookup(lambda e: float(e.feature[0]))
+    best_ci = res.cluster
+    expected = len(bank.medoid_ids) + len(bank.clusters[best_ci]) - 1
+    assert res.evaluations == expected
+
+
+def test_insert_routes_to_nearest_cluster_without_scoring():
+    bank, centers = _mk_bank()
+    new = PromptEntry(prompt=np.zeros((4, 4), np.float32),
+                      feature=(centers[2] + 0.01).astype(np.float32),
+                      origin="new")
+    ci, evicted = bank.insert(new)
+    members = {bank.entries[i].origin.split("/")[0]
+               for i in bank.clusters[ci] if bank.entries[i].origin != "new"}
+    assert members == {"blob2"}
+    assert evicted is None              # capacity not exceeded
+
+
+def test_replacement_evicts_least_diverse():
+    bank, centers = _mk_bank(n=30, k=3, capacity=30)
+    mid = bank.medoid_ids[0]
+    mfeat = bank.entries[mid].feature
+    new = PromptEntry(prompt=np.zeros((4, 4), np.float32),
+                      feature=mfeat + 1e-4, origin="dup")
+    ci, evicted = bank.insert(new)
+    assert evicted is not None and evicted != mid
+    assert bank.entries[evicted].origin == "<evicted>"
+    assert len(bank) == 30              # capacity preserved
+    # the evicted entry is never returned by lookup
+    res = bank.lookup(lambda e: 0.0)
+    assert res.entry.origin != "<evicted>"
+
+
+def test_expected_evaluations_optimum():
+    bank, _ = _mk_bank(n=100, k=10)
+    assert bank.expected_evaluations() == pytest.approx(10 + 100 / 10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(5, 50), k=st.integers(2, 8), seed=st.integers(0, 999))
+def test_kmedoids_properties(n, k, seed):
+    """Property: every point is assigned to exactly one cluster led by a
+    valid medoid index; clusters partition [0, n)."""
+    feats = np.random.default_rng(seed).normal(size=(n, 5))
+    medoids, assign = k_medoids(feats, k, seed=seed)
+    kk = min(k, n)
+    assert len(medoids) == kk
+    assert ((assign >= 0) & (assign < kk)).all()
+    assert sorted(np.unique(medoids).tolist()) == sorted(medoids.tolist())
+
+
+def test_cosine_distance_range():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(10, 4))
+    d = cosine_distance(a, a)
+    assert np.allclose(np.diag(d), 0, atol=1e-6)
+    assert (d >= -1e-6).all() and (d <= 2 + 1e-6).all()

@@ -1,0 +1,155 @@
+"""Workload Scheduler (§4.4) + simulator invariants, incl. hypothesis
+property tests over random traces."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import (
+    SimConfig,
+    TraceConfig,
+    clone_jobs,
+    generate_trace,
+    make_system,
+)
+from repro.core.jobs import LLM_PROFILES, Job, exec_time, iter_time
+from repro.core.scheduler import PromptTunerSim
+
+
+def _trace(load="medium", S=1.0, seed=0, minutes=5):
+    return generate_trace(TraceConfig(load=load, slo_emergence=S, seed=seed,
+                                      minutes=minutes))
+
+
+def test_all_jobs_complete_and_accounted():
+    jobs = _trace()
+    for name in ("prompttuner", "infless", "elasticflow"):
+        res = make_system(name, SimConfig(max_gpus=32)).run(clone_jobs(jobs))
+        assert len(res.records) == len(jobs), name
+        finished = [r for r in res.records if np.isfinite(r.finish)]
+        assert len(finished) == len(jobs), f"{name}: unfinished jobs"
+        assert res.cost > 0
+
+
+def test_gpu_conservation_prompttuner():
+    """warm pools + cold pool never exceed the fleet; nothing negative."""
+    jobs = _trace(minutes=3)
+    cfg = SimConfig(max_gpus=32)
+    sys_ = make_system("prompttuner", cfg)
+
+    orig = sys_._schedule
+
+    def checked():
+        orig()
+        total_warm = sum(p.total() for p in sys_.pools.values())
+        assert sys_.cold_free >= 0
+        assert total_warm + sys_.cold_free <= cfg.max_gpus
+        for p in sys_.pools.values():
+            assert p.busy >= 0 and len(p.idle) >= 0
+
+    sys_._schedule = checked
+    sys_.run(clone_jobs(jobs))
+
+
+def test_iter_time_near_linear_scaling():
+    prof = LLM_PROFILES["vicuna-7b"]
+    t1 = iter_time(prof, 1)
+    t8 = iter_time(prof, 8)
+    assert t8 < t1 / 7.0                       # near-linear
+    assert t8 > t1 / 8.0                       # but not superlinear
+
+
+def test_exec_time_includes_bank_and_overhead():
+    j = Job(0, "gpt2-base", 0.0, 100.0, iters_manual=100, iters_bank=25)
+    prof = j.profile()
+    no_bank = exec_time(j, 1, used_bank=False, alloc_overhead=2.0)
+    bank = exec_time(j, 1, used_bank=True, alloc_overhead=2.0)
+    assert no_bank == pytest.approx(100 * prof.iter_time_1replica + 2.0)
+    assert bank == pytest.approx(
+        25 * prof.iter_time_1replica + 2.0 + prof.bank_lookup_s)
+
+
+def test_latency_budget_gates_bank():
+    cfg = SimConfig(max_gpus=8)
+    sys_ = make_system("prompttuner", cfg)
+    prof = LLM_PROFILES["gpt2-base"]
+    slo_ok = prof.bank_lookup_s / cfg.latency_budget_frac + 1.0
+    slo_bad = prof.bank_lookup_s / cfg.latency_budget_frac - 1.0
+    j_ok = Job(0, "gpt2-base", 0.0, slo_ok, 100, 25)
+    j_bad = Job(1, "gpt2-base", 0.0, slo_bad, 100, 25)
+    assert sys_.use_bank_for(j_ok) is True
+    assert sys_.use_bank_for(j_bad) is False
+
+
+def test_bank_reduces_cost_and_violation():
+    jobs = _trace(load="high", S=0.8, minutes=5)
+    on = make_system("prompttuner", SimConfig(max_gpus=24)).run(
+        clone_jobs(jobs)).summary()
+    off = make_system("prompttuner",
+                      SimConfig(max_gpus=24, use_bank=False)).run(
+        clone_jobs(jobs)).summary()
+    assert on["slo_violation_pct"] <= off["slo_violation_pct"]
+    assert on["cost_usd"] < off["cost_usd"]
+
+
+def test_delay_schedulable_reduces_cost():
+    jobs = _trace(load="high", S=1.2, minutes=5)
+    with_delay = make_system("prompttuner", SimConfig(max_gpus=24)).run(
+        clone_jobs(jobs)).summary()
+    without = make_system(
+        "prompttuner", SimConfig(max_gpus=24, use_delay=False)).run(
+        clone_jobs(jobs)).summary()
+    assert with_delay["cost_usd"] <= without["cost_usd"] * 1.05
+
+
+def test_warm_reuse_beats_cold_only():
+    jobs = _trace(load="medium", S=0.6, minutes=5)
+    warm = make_system("prompttuner", SimConfig(max_gpus=24)).run(
+        clone_jobs(jobs)).summary()
+    no_warm = make_system(
+        "prompttuner", SimConfig(max_gpus=24, use_warm=False)).run(
+        clone_jobs(jobs)).summary()
+    assert warm["slo_violation_pct"] <= no_warm["slo_violation_pct"]
+
+
+def test_elasticflow_bills_full_cluster():
+    jobs = _trace(minutes=2)
+    cfg = SimConfig(max_gpus=16)
+    res = make_system("elasticflow", cfg).run(clone_jobs(jobs))
+    expected = cfg.max_gpus * res.makespan * cfg.price_per_gpu_s
+    assert res.cost == pytest.approx(expected, rel=0.05)
+
+
+def test_prompttuner_beats_baselines_end_to_end():
+    """The paper's headline ordering on a medium trace."""
+    jobs = _trace(load="medium", S=1.0, seed=1, minutes=10)
+    out = {}
+    for name in ("prompttuner", "infless", "elasticflow"):
+        out[name] = make_system(name, SimConfig(max_gpus=32)).run(
+            clone_jobs(jobs)).summary()
+    assert (out["prompttuner"]["slo_violation_pct"]
+            <= out["infless"]["slo_violation_pct"])
+    assert (out["prompttuner"]["cost_usd"] < out["elasticflow"]["cost_usd"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       gpus=st.sampled_from([8, 16, 32]),
+       S=st.floats(0.5, 2.0))
+def test_sim_invariants_random_traces(seed, gpus, S):
+    """Property: for any trace/fleet/SLO emergence — every job is recorded
+    exactly once, finish >= start >= submit, cost >= 0, gpus allocated in
+    replica units."""
+    jobs = generate_trace(TraceConfig(load="low", slo_emergence=S,
+                                      seed=seed, minutes=3))
+    res = make_system("prompttuner", SimConfig(max_gpus=gpus)).run(
+        clone_jobs(jobs))
+    assert len(res.records) == len(jobs)
+    seen = set()
+    for r in res.records:
+        assert r.job.job_id not in seen
+        seen.add(r.job.job_id)
+        if np.isfinite(r.finish):
+            assert r.finish >= r.start >= r.job.submit_time - 1e-6
+            prof = r.job.profile()
+            assert r.gpus % prof.gpus_per_replica == 0
+    assert res.cost >= 0

@@ -1,0 +1,77 @@
+"""LPT algorithms: soft prompt + prefix (reparameterized) variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TuneConfig
+from repro.data import LoaderConfig, TaskLoader
+from repro.tuning import PromptTuner, activation_features
+
+
+def test_soft_prompt_tuning_reduces_loss(pre_base):
+    pre = pre_base
+    task = pre.tasks[5]
+    tc = TuneConfig(lr=0.5, batch_size=16, eval_every=5, max_iters=60)
+    tuner = PromptTuner(pre.model, tc)
+    loader = TaskLoader(task, LoaderConfig(batch_size=16))
+    pp = tuner.init_prompt(pre.params, jax.random.key(0))
+    eb = loader.eval_batch(16)
+    before = tuner.score(pp, pre.params, eb)
+    res = tuner.tune(pre.params, loader, pp, max_iters=60)
+    after = tuner.score(res["prompt"], pre.params, eb)
+    assert after < before
+
+
+def test_prefix_variant_runs(pre_base):
+    pre = pre_base
+    tc = TuneConfig(algorithm="prefix", lr=0.3, batch_size=8,
+                    eval_every=5, max_iters=10)
+    tuner = PromptTuner(pre.model, tc)
+    loader = TaskLoader(pre.tasks[0], LoaderConfig(batch_size=8))
+    pp = tuner.init_prompt(pre.params, jax.random.key(1))
+    assert "reparam_w" in pp and "reparam_v" in pp
+    res = tuner.tune(pre.params, loader, pp, max_iters=10)
+    assert res["iters"] == 10
+    assert np.isfinite(res["history"][-1][2]) if res["history"] else True
+
+
+def test_tune_returns_zero_ita_when_target_met(pre_base):
+    """Prompt reusing's endgame: an init already at target has ITA=0."""
+    pre = pre_base
+    task = pre.tasks[3]
+    tc = TuneConfig(lr=0.5, batch_size=16)
+    tuner = PromptTuner(pre.model, tc)
+    loader = TaskLoader(task, LoaderConfig(batch_size=16))
+    own = {"soft_prompt": jnp.asarray(pre.task_prompts[task.task_id])}
+    score = tuner.score(own, pre.params, loader.eval_batch(16))
+    res = tuner.tune(pre.params, loader, own, target_loss=score + 1.0,
+                     max_iters=50)
+    assert res["iters"] == 0 and res["reached"]
+
+
+def test_activation_features_discriminate_tasks(pre_base):
+    """Features of prompts for the same family must be closer than
+    across families (the property K-medoid clustering relies on)."""
+    pre = pre_base
+    fam = {}
+    for tid in ["shift:0", "shift:1", "xor:0", "xor:1"]:
+        fam[tid] = activation_features(
+            pre.model, pre.params, jnp.asarray(pre.task_prompts[tid]))
+    def cos(a, b):
+        return float(np.dot(a, b)
+                     / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-9))
+    within = cos(fam["shift:0"], fam["shift:1"])
+    across = cos(fam["shift:0"], fam["xor:0"])
+    assert within > across
+
+
+def test_init_prompt_from_tokens(pre_base):
+    pre = pre_base
+    tc = TuneConfig(prompt_len=4)
+    tuner = PromptTuner(pre.model, tc)
+    toks = jnp.array([3, 4, 5, 6])
+    pp = tuner.init_prompt(pre.params, jax.random.key(0), token_ids=toks)
+    expected = np.asarray(pre.params["embedding"])[np.asarray(toks)]
+    np.testing.assert_allclose(np.asarray(pp["soft_prompt"]), expected,
+                               rtol=1e-6)
