@@ -5,7 +5,7 @@ from __future__ import annotations
 from typing import Dict
 
 from benchmarks.common import fmt, save_result, table
-from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, make_system
+from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, policies
 
 ABLATIONS = {
     "full": {},
@@ -28,7 +28,7 @@ def _run(cfg_kw: Dict, S: float = 1.0, seeds: int = 3,
     for sd in range(seeds):
         jobs = generate_trace(TraceConfig(load="medium", slo_emergence=S,
                                           seed=sd, minutes=minutes))
-        res = make_system("prompttuner",
+        res = policies.build("prompttuner",
                           SimConfig(max_gpus=32, **cfg_kw)).run(
             clone_jobs(jobs)).summary()
         agg["slo_violation_pct"] += res["slo_violation_pct"] / seeds

@@ -5,7 +5,7 @@ from __future__ import annotations
 from typing import Dict
 
 from benchmarks.common import fmt, save_result, table
-from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, make_system
+from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, policies
 
 SYSTEMS = ("prompttuner", "infless", "elasticflow")
 
@@ -18,7 +18,7 @@ def run_point(load: str, S: float, *, gpus: int = 32, seed: int = 0,
         jobs = generate_trace(TraceConfig(load=load, slo_emergence=S,
                                           seed=seed + sd, minutes=minutes))
         for name in SYSTEMS:
-            res = make_system(name, SimConfig(max_gpus=gpus)).run(
+            res = policies.build(name, SimConfig(max_gpus=gpus)).run(
                 clone_jobs(jobs)).summary()
             out[name]["slo_violation_pct"] += res["slo_violation_pct"] / seeds
             out[name]["cost_usd"] += res["cost_usd"] / seeds

@@ -5,7 +5,7 @@ from __future__ import annotations
 from typing import Dict
 
 from benchmarks.common import fmt, save_result, table
-from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, make_system
+from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, policies
 
 SYSTEMS = ("prompttuner", "infless", "elasticflow")
 
@@ -18,7 +18,7 @@ def run_setting(load: str, gpus: int, scale: float = 1.0, seeds: int = 3,
                                           seed=sd, minutes=minutes,
                                           scale=scale))
         for name in SYSTEMS:
-            res = make_system(name, SimConfig(max_gpus=gpus)).run(
+            res = policies.build(name, SimConfig(max_gpus=gpus)).run(
                 clone_jobs(jobs)).summary()
             out[name]["slo_violation_pct"] += res["slo_violation_pct"] / seeds
             out[name]["cost_usd"] += res["cost_usd"] / seeds

@@ -11,7 +11,7 @@ from typing import Dict
 import numpy as np
 
 from benchmarks.common import fmt, save_result, table
-from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, make_system
+from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, policies
 
 
 def run(quick: bool = False) -> Dict:
@@ -21,7 +21,7 @@ def run(quick: bool = False) -> Dict:
     out: Dict = {}
 
     # (a) ElasticFlow utilization: busy GPUs / provisioned
-    ef = make_system("elasticflow", SimConfig(max_gpus=32))
+    ef = policies.build("elasticflow", SimConfig(max_gpus=32))
     res = ef.run(clone_jobs(jobs))
     util = [100.0 * busy / 32 for t, busy in res.util_samples
             if t < minutes * 60]
@@ -31,7 +31,7 @@ def run(quick: bool = False) -> Dict:
     }
 
     # (b) INFless: init share of end-to-end latency
-    inf = make_system("infless", SimConfig(max_gpus=32))
+    inf = policies.build("infless", SimConfig(max_gpus=32))
     res = inf.run(clone_jobs(jobs))
     shares = []
     for r in res.records:
@@ -48,7 +48,7 @@ def run(quick: bool = False) -> Dict:
     for gpus in (8, 16, 24, 32):
         row = {}
         for name in ("elasticflow", "infless", "prompttuner"):
-            r = make_system(name, SimConfig(max_gpus=gpus)).run(
+            r = policies.build(name, SimConfig(max_gpus=gpus)).run(
                 clone_jobs(jobs)).summary()
             row[name] = r["slo_violation_pct"]
         out["fig3c"][str(gpus)] = row

@@ -12,7 +12,7 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import fmt, make_ita_context, save_result, table
-from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, make_system
+from repro.cluster import SimConfig, TraceConfig, clone_jobs, generate_trace, policies
 
 
 def window_sweep(windows=(15, 30, 60, 120, 240), seeds: int = 3,
@@ -23,7 +23,7 @@ def window_sweep(windows=(15, 30, 60, 120, 240), seeds: int = 3,
         for sd in range(seeds):
             jobs = generate_trace(TraceConfig(load="medium", seed=sd,
                                               minutes=minutes))
-            r = make_system("prompttuner",
+            r = policies.build("prompttuner",
                             SimConfig(max_gpus=32, reclaim_window=w)).run(
                 clone_jobs(jobs)).summary()
             agg["slo_violation_pct"] += r["slo_violation_pct"] / seeds
@@ -85,7 +85,7 @@ def bank_size_sim(quality: Dict, seeds: int = 3, minutes: int = 20) -> Dict:
             for sd in range(seeds):
                 jobs = generate_trace(TraceConfig(load="medium", seed=sd,
                                                   minutes=minutes))
-                r = make_system("prompttuner",
+                r = policies.build("prompttuner",
                                 SimConfig(max_gpus=32)).run(
                     clone_jobs(jobs)).summary()
                 agg["slo_violation_pct"] += r["slo_violation_pct"] / seeds

@@ -1,7 +1,10 @@
 """Cluster-scale scenario: replay a spiky 20-minute LPT trace through
-PromptTuner, INFless and ElasticFlow; report SLO violations + cost.
+every registered scheduling policy; report SLO violations + cost.
 
     PYTHONPATH=src python examples/cluster_sim.py [--load medium] [--S 1.0]
+
+Policies come from the string-keyed registry — adding a new system is
+one class in ``repro/cluster/policies/`` and it shows up here for free.
 """
 import argparse
 import sys
@@ -13,7 +16,7 @@ from repro.cluster import (
     TraceConfig,
     clone_jobs,
     generate_trace,
-    make_system,
+    policies,
 )
 
 
@@ -26,21 +29,23 @@ def main():
                     help="SLO emergence (smaller = more stringent)")
     ap.add_argument("--gpus", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policies", nargs="*", default=policies.available(),
+                    help=f"subset of {policies.available()}")
     args = ap.parse_args()
 
     jobs = generate_trace(TraceConfig(load=args.load, slo_emergence=args.S,
                                       seed=args.seed))
     print(f"trace: {len(jobs)} LPT jobs over 20 min "
           f"(load={args.load}, S={args.S}, fleet={args.gpus} GPUs)\n")
-    print(f"{'system':14s} {'SLO viol %':>10s} {'cost $':>8s} "
+    print(f"{'policy':14s} {'SLO viol %':>10s} {'cost $':>8s} "
           f"{'GPU-hours':>10s}")
-    for name in ("prompttuner", "infless", "elasticflow"):
-        res = make_system(name, SimConfig(max_gpus=args.gpus)).run(
+    for name in args.policies:
+        res = policies.build(name, SimConfig(max_gpus=args.gpus)).run(
             clone_jobs(jobs))
         s = res.summary()
         print(f"{name:14s} {s['slo_violation_pct']:10.1f} "
               f"{s['cost_usd']:8.2f} {s['gpu_seconds'] / 3600:10.1f}")
-    print("\n(PromptTuner = warm/cold pools + Algorithms 1&2 + "
+    print("\n(prompttuner = warm/cold pools + Algorithms 1&2 + "
           "DelaySchedulable + Prompt Bank latency budget)")
 
 

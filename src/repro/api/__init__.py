@@ -1,0 +1,11 @@
+"""repro.api — the service layer tying bank + tuner + scheduler into the
+system the paper describes. See :class:`PromptTunerService`."""
+from repro.api.service import PromptTunerService
+from repro.api.types import JobHandle, JobResult, SubmitRequest
+
+__all__ = [
+    "JobHandle",
+    "JobResult",
+    "PromptTunerService",
+    "SubmitRequest",
+]

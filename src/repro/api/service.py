@@ -1,0 +1,175 @@
+"""PromptTunerService — the single front door tying the paper's pieces
+together: Prompt Bank (§4.3) + latency-budget routing (§4.4.3) +
+Workload Scheduler (§4.4) + online bank insertion (Fig 5b).
+
+    service = PromptTunerService(SimConfig(max_gpus=32), bank=bank,
+                                 score_fn_factory=my_scorer)
+    handle = service.submit(SubmitRequest(task_id="t0", llm="gpt2-base",
+                                          slo=120.0, iters_manual=400,
+                                          iters_bank=120))
+    results = service.run_until_idle()
+
+Per request the service:
+
+1. applies the §4.4.3 latency budget — the request is routed through the
+   Prompt Bank only if the bank's lookup latency fits in
+   ``latency_budget_frac`` of its SLO;
+2. if routed (and a bank + scorer are attached), performs the two-layer
+   lookup to pick the initial prompt, recording its origin and Eqn-1
+   score on the handle;
+3. hands the job to the scheduling policy (any registry name — the
+   facade is policy-agnostic) over the event engine;
+4. on completion, inserts the freshly tuned prompt into the bank by
+   feature similarity — no score evaluations (Fig 5b) — so later
+   requests benefit from this request's tuning work.
+
+The scorer is a factory ``score_fn_factory(request) -> (entry -> float)``
+because Eqn-1 scores are computed against the *request's* eval set; the
+bank itself stays agnostic to how scores are produced.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Set
+
+import numpy as np
+
+from repro.cluster.engine import (
+    ClusterEngine,
+    SimConfig,
+    SimResult,
+    bank_fits_budget,
+)
+from repro.cluster.policies import get as get_policy
+from repro.core.jobs import LLM_PROFILES, Job
+from repro.core.prompt_bank import PromptBank, PromptEntry
+
+from repro.api.types import JobHandle, JobResult, SubmitRequest
+
+ScoreFn = Callable[[PromptEntry], float]
+
+
+class PromptTunerService:
+    """Facade over engine + policy + bank. ``policy`` is any registry
+    name (``prompttuner`` by default), so baselines and new policies get
+    the same front door for free."""
+
+    def __init__(
+        self,
+        cfg: Optional[SimConfig] = None,
+        *,
+        policy: str = "prompttuner",
+        bank: Optional[PromptBank] = None,
+        score_fn_factory: Optional[Callable[[SubmitRequest], ScoreFn]] = None,
+    ):
+        self.cfg = cfg or SimConfig()
+        self.policy_name = policy
+        self.engine = ClusterEngine(self.cfg, get_policy(policy)(self.cfg))
+        self.bank = bank
+        self.score_fn_factory = score_fn_factory
+        self._handles: Dict[int, JobHandle] = {}
+        self._requests: Dict[int, SubmitRequest] = {}
+        self._batch: List[Job] = []
+        self._reported: Set[int] = set()
+        self._next_id = 0
+
+    # -- §4.4.3 latency budget -------------------------------------------------
+
+    def route_through_bank(self, req: SubmitRequest) -> bool:
+        """Would this request's bank lookup fit in its latency budget?
+        (The same predicate the scheduler applies to the job — shared
+        implementation, so handle and record can never disagree.)"""
+        return bank_fits_budget(
+            self.cfg, LLM_PROFILES[req.llm].bank_lookup_s, req.slo)
+
+    # -- front door ------------------------------------------------------------
+
+    def submit(self, req: SubmitRequest) -> JobHandle:
+        """Admit one request: route, look up an initial prompt if routed,
+        and enqueue the tuning job for the next ``run_until_idle``."""
+        if req.llm not in LLM_PROFILES:
+            raise KeyError(f"unknown LLM {req.llm!r}; "
+                           f"known: {sorted(LLM_PROFILES)}")
+        submitted_at = (self.engine.now if req.submit_time is None
+                        else float(req.submit_time))
+        routed = self.route_through_bank(req)
+        origin = score = init_prompt = None
+        if routed and self.bank is not None and self.score_fn_factory is not None:
+            lookup = self.bank.lookup(self.score_fn_factory(req))
+            origin, score = lookup.entry.origin, lookup.score
+            init_prompt = lookup.entry.prompt
+        job_id = self._next_id
+        self._next_id += 1
+        job = Job(
+            job_id=job_id,
+            llm=req.llm,
+            submit_time=submitted_at,
+            slo=float(req.slo),
+            iters_manual=req.iters_manual,
+            iters_bank=req.iters_bank,
+            max_iters=req.max_iters,
+            task_id=req.task_id,
+        )
+        handle = JobHandle(
+            job_id=job_id,
+            task_id=req.task_id,
+            llm=req.llm,
+            submitted_at=submitted_at,
+            routed_through_bank=routed,
+            bank_origin=origin,
+            bank_score=score,
+            initial_prompt=init_prompt,
+        )
+        self._handles[job_id] = handle
+        self._requests[job_id] = req
+        self._batch.append(job)
+        return handle
+
+    def run_until_idle(self) -> List[JobResult]:
+        """Drive the engine until no submitted work is outstanding.
+        Returns a JobResult per job not yet reported, inserting freshly
+        tuned prompts into the bank (Fig 5b) as their jobs finish."""
+        self.engine.run(self._batch)
+        self._batch = []
+        out: List[JobResult] = []
+        for rec in self.engine.records:
+            jid = rec.job.job_id
+            if jid in self._reported or jid not in self._handles:
+                continue
+            self._reported.add(jid)
+            req = self._requests[jid]
+            inserted = False
+            if (self.bank is not None and np.isfinite(rec.finish)
+                    and req.prompt is not None and req.feature is not None):
+                self.bank.insert(PromptEntry(
+                    prompt=np.asarray(req.prompt),
+                    feature=np.asarray(req.feature),
+                    origin=f"{req.task_id}/online",
+                ))
+                inserted = True
+            out.append(JobResult(
+                handle=self._handles[jid],
+                gpus=rec.gpus,
+                start=rec.start,
+                finish=rec.finish,
+                violated=rec.violated,
+                wait=rec.wait,
+                used_bank=rec.used_bank,
+                init_overhead=rec.init_overhead,
+                inserted_to_bank=inserted,
+            ))
+        return out
+
+    # -- introspection -----------------------------------------------------------
+
+    @property
+    def now(self) -> float:
+        return self.engine.now
+
+    def summary(self) -> Dict[str, float]:
+        """Aggregate SLO/cost summary over everything run so far."""
+        return SimResult(
+            records=self.engine.records,
+            cost=self.engine.cost,
+            gpu_seconds=self.engine.gpu_seconds,
+            makespan=self.engine.now,
+        ).summary()

@@ -1,0 +1,66 @@
+"""Typed request/handle/result surface of the PromptTuner service."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class SubmitRequest:
+    """One LPT request as a user of the service states it (Table 3).
+
+    ``iters_manual`` / ``iters_bank`` are the iterations-to-accuracy with
+    the user's manual initial prompt vs. a bank-provided one (in the full
+    testbed they come out of real tuning runs; the trace generator
+    synthesizes them from the calibration distributions).
+
+    ``prompt`` / ``feature`` optionally carry the freshly tuned soft
+    prompt and its activation feature; when present, the service inserts
+    the prompt into the bank once the job finishes — the online insertion
+    loop of Fig 5b.
+    """
+
+    task_id: str
+    llm: str
+    slo: float                         # seconds from submission
+    iters_manual: int
+    iters_bank: int
+    submit_time: Optional[float] = None    # None => service clock "now"
+    max_iters: int = 10_000
+    prompt: Optional[np.ndarray] = None
+    feature: Optional[np.ndarray] = None
+
+
+@dataclass(frozen=True)
+class JobHandle:
+    """Returned by ``submit``: identity plus the routing decision."""
+
+    job_id: int
+    task_id: str
+    llm: str
+    submitted_at: float
+    routed_through_bank: bool          # §4.4.3 latency-budget decision
+    bank_origin: Optional[str] = None  # origin of the looked-up initial prompt
+    bank_score: Optional[float] = None # its Eqn-1 score
+    initial_prompt: Optional[np.ndarray] = None  # the prompt itself, for tuning
+
+
+@dataclass(frozen=True)
+class JobResult:
+    """Returned by ``run_until_idle`` for each newly finished job."""
+
+    handle: JobHandle
+    gpus: int
+    start: float
+    finish: float
+    violated: bool
+    wait: float
+    used_bank: bool
+    init_overhead: float
+    inserted_to_bank: bool             # Fig 5b online insertion happened
+
+    @property
+    def completed(self) -> bool:
+        return np.isfinite(self.finish)

@@ -1,4 +1,14 @@
-from repro.cluster.sim import ClusterSim, SimConfig, SimResult, JobRecord, WarmPool
+from repro.cluster.engine import (
+    ClusterEngine,
+    ClusterSim,
+    JobRecord,
+    ResourceView,
+    SimConfig,
+    SimResult,
+    WarmPool,
+)
+from repro.cluster import policies
+from repro.cluster.policies import SchedulingPolicy
 from repro.cluster.trace import (
     clone_jobs,
     LOADS,
@@ -10,12 +20,15 @@ from repro.cluster.trace import (
 from repro.cluster.baselines import ElasticFlowSim, INFlessSim, make_system
 
 __all__ = [
+    "ClusterEngine",
     "ClusterSim",
     "ElasticFlowSim",
     "HEAVY_LOADS",
     "INFlessSim",
     "JobRecord",
     "LOADS",
+    "ResourceView",
+    "SchedulingPolicy",
     "SimConfig",
     "SimResult",
     "TraceConfig",
@@ -24,4 +37,5 @@ __all__ = [
     "generate_trace",
     "load_calibration",
     "make_system",
+    "policies",
 ]

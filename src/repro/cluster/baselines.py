@@ -1,174 +1,37 @@
-"""Baseline cluster-management systems (§3, §6.1).
+"""Deprecated shims for the baseline systems (§3, §6.1).
 
-**INFless** [85] — SLO-aware serverless DL *inference* system, reinforced
-per the paper with (a) multi-GPU execution over a Memcached channel and
-(b) the Prompt Bank, for a fair comparison. Characteristics modeled:
-  * per-model instance autoscaling with a keep-alive window (billed while
-    alive, busy or idle),
-  * one GPU per instance; a multi-GPU job starts only when ALL of its
-    instances are up — warm instances connect in ~2 s but each cold
-    instance pays the full container/runtime/weights bring-up, so the job
-    start time is the MAX over instance inits (the straggler effect of
-    Fig 3b, 11-50 % of end-to-end latency),
-  * no global schedule: per-model FIFO, no delayed execution.
+The INFless and ElasticFlow models now live in
+:mod:`repro.cluster.policies` (``infless.py`` / ``elasticflow.py``);
+this module keeps the old class names importable as one-line policy
+wrappers. Prefer::
 
-**ElasticFlow** [41] — SLO-aware elastic DL *training* system:
-  * a statically provisioned fixed-size cluster (all ``max_gpus`` billed
-    for the whole experiment — Inefficiency 1),
-  * deadline-ordered admission with minimum-satisfactory-share
-    allocation (its core algorithm),
-  * elastic (it can choose any GPU count), but every job start pays the
-    cold bring-up: no runtime reuse across jobs.
+    from repro.cluster import policies
+    engine = policies.build("infless", cfg)
 """
 from __future__ import annotations
 
-from typing import Dict, List
-
-from repro.cluster.sim import ClusterSim, SimConfig
-from repro.core.jobs import Job, exec_time
+from repro.cluster.engine import ClusterEngine, SimConfig
+from repro.cluster.policies import available, get
 
 
-class INFlessSim(ClusterSim):
-    name = "infless"
-
-    # Serverless keep-alive is tuned for single-GPU inference traffic;
-    # multi-instance LPT jobs release whole gangs at once, so the idle
-    # tail INFless pays for is ~2x the per-model window PromptTuner's
-    # demand-driven reclaim holds (its scheduler returns GPUs as soon as
-    # the warm pool exceeds pending demand).
-    KEEP_ALIVE_FACTOR = 2.0
-    # container bring-up is heavy-tailed (Fig 3b: init is 11 % of e2e
-    # latency on average, up to 50 %): each cold instance draws its init
-    # time from cold_overhead x U(0.8, 2.2); a multi-instance gang waits
-    # for the slowest (the straggler the warm allocator avoids).
-    INIT_JITTER = (0.8, 2.2)
+class INFlessSim(ClusterEngine):
+    """Deprecated: use ``policies.build('infless', cfg)``."""
 
     def __init__(self, cfg: SimConfig):
-        super().__init__(cfg)
-        import numpy as np
-        self._rng = np.random.default_rng(12345)
-
-    def billed_gpus(self) -> int:
-        return sum(p.total() for p in self.pools.values())
-
-    def _maintain(self) -> None:
-        for llm, p in self.pools.items():
-            p.mature(self.now)
-            # keep-alive: idle instances die after the window
-            self.cold_free += p.reclaim(
-                self.now, self.cfg.keep_alive * self.KEEP_ALIVE_FACTOR)
-
-    def _schedule(self) -> None:
-        for llm, queue in self.pending.items():
-            if not queue:
-                continue
-            pool = self.pool(llm)
-            prof = queue[0].profile()
-            queue.sort(key=lambda j: j.submit_time)      # FIFO, no global sort
-            leftover: List[Job] = []
-            for job in queue:
-                used_bank = self.use_bank_for(job)
-                slo_rem = job.deadline - self.now
-                avail = len(pool.idle) + self.cold_free
-                max_rep = min(avail // prof.gpus_per_replica,
-                              self.cfg.max_replicas_per_job)
-                if max_rep < 1:
-                    leftover.append(job)
-                    continue
-                # grow instances until the SLO fits. INFless is SLO-aware
-                # about startup: it uses the cold bring-up estimate once
-                # the allocation exceeds the warm instances. The remaining
-                # inefficiency (the paper's #2) is the STRAGGLER: one cold
-                # instance delays the whole multi-instance gang.
-                a = 1
-                while a < max_rep:
-                    g = a * prof.gpus_per_replica
-                    oh = (prof.warm_overhead if g <= len(pool.idle)
-                          else prof.cold_overhead)
-                    if exec_time(job, g, used_bank=used_bank,
-                                 alloc_overhead=oh) <= slo_rem:
-                        break
-                    a += 1
-                g = a * prof.gpus_per_replica
-                n_warm = min(len(pool.idle), g)
-                n_cold = g - n_warm
-                pool.take_idle(n_warm)
-                if n_cold:
-                    self.cold_free -= n_cold
-                    pool.busy += n_cold
-                # straggler: the job waits for the SLOWEST instance init
-                if n_cold:
-                    jitter = self._rng.uniform(*self.INIT_JITTER,
-                                               size=n_cold).max()
-                    overhead = prof.cold_overhead * float(jitter)
-                else:
-                    overhead = prof.warm_overhead
-                self.start_job(job, g, overhead, used_bank)
-            self.pending[llm] = leftover
+        super().__init__(cfg, get("infless")(cfg))
 
 
-class ElasticFlowSim(ClusterSim):
-    name = "elasticflow"
+class ElasticFlowSim(ClusterEngine):
+    """Deprecated: use ``policies.build('elasticflow', cfg)``."""
 
     def __init__(self, cfg: SimConfig):
-        super().__init__(cfg)
-        self.free = cfg.max_gpus
-
-    def billed_gpus(self) -> int:
-        return self.cfg.max_gpus          # static provisioning: always billed
-
-    def _maintain(self) -> None:
-        pass                              # no pools to mature/reclaim
-
-    def _on_job_done(self, job: Job, gpus: int) -> None:
-        self.free += gpus
-
-    def _schedule(self) -> None:
-        # global deadline order (ElasticFlow's admission control)
-        all_pending: List[Job] = [j for q in self.pending.values() for j in q]
-        all_pending.sort(key=lambda j: j.deadline)
-        started = set()
-        for job in all_pending:
-            prof = job.profile()
-            used_bank = self.use_bank_for(job)
-            slo_rem = job.deadline - self.now
-            max_rep = min(self.free // prof.gpus_per_replica,
-                          self.cfg.max_replicas_per_job)
-            if max_rep < 1:
-                continue
-            a = 1
-            while (exec_time(job, a * prof.gpus_per_replica,
-                             used_bank=used_bank,
-                             alloc_overhead=prof.cold_overhead) > slo_rem
-                   and a < max_rep):
-                a += 1
-            g = a * prof.gpus_per_replica
-            feasible = exec_time(job, g, used_bank=used_bank,
-                                 alloc_overhead=prof.cold_overhead) <= slo_rem
-            hopeless = exec_time(
-                job, max_rep * prof.gpus_per_replica, used_bank=used_bank,
-                alloc_overhead=prof.cold_overhead) > slo_rem
-            if feasible or (hopeless and self.cfg.best_effort):
-                if hopeless:
-                    g = prof.gpus_per_replica     # best effort: min share
-                self.free -= g
-                # every start is a cold bring-up: no runtime reuse
-                self.start_job(job, g, prof.cold_overhead, used_bank)
-                started.add(job.job_id)
-        for llm in self.pending:
-            self.pending[llm] = [j for j in self.pending[llm]
-                                 if j.job_id not in started]
+        super().__init__(cfg, get("elasticflow")(cfg))
 
 
-SYSTEMS = {
-    "prompttuner": None,   # filled lazily to avoid a circular import
-    "infless": INFlessSim,
-    "elasticflow": ElasticFlowSim,
-}
+# name -> policy class, for callers that used to introspect this dict
+SYSTEMS = {name: get(name) for name in available()}
 
 
-def make_system(name: str, cfg: SimConfig) -> ClusterSim:
-    if name == "prompttuner":
-        from repro.core.scheduler import PromptTunerSim
-        return PromptTunerSim(cfg)
-    return SYSTEMS[name](cfg)
+def make_system(name: str, cfg: SimConfig) -> ClusterEngine:
+    """Deprecated alias of ``policies.build(name, cfg)``."""
+    return ClusterEngine(cfg, get(name)(cfg))

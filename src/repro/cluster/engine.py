@@ -1,0 +1,475 @@
+"""Pure discrete-event cluster engine for LPT scheduling (§4.4, §6).
+
+This module is the **mechanism** half of the policy/mechanism split:
+
+* :class:`ClusterEngine` advances an event heap (arrivals / scheduler
+  rounds / job completions / warm-up completions) and accrues resource
+  cost continuously as ``billed_gpus * dt * price``. It owns the pending
+  queues, the per-LLM warm pools, the shared cold pool, and the billing
+  and record-keeping — and contains **no system-specific scheduling
+  logic**.
+* :class:`ResourceView` is the narrow API a
+  :class:`~repro.cluster.policies.SchedulingPolicy` sees each round:
+  pending queues, warm pools, cold capacity, release timelines, and the
+  ``start_job`` / ``warm_up`` / ``reclaim`` verbs. The view enforces the
+  resource invariants (cold pool never negative, warm-pool accounting
+  conserved) so a buggy policy fails loudly instead of corrupting state.
+
+Systems (PromptTuner, INFless, ElasticFlow, ...) live in
+``repro.cluster.policies`` and are obtained via the string-keyed
+registry::
+
+    from repro.cluster import policies
+    engine = policies.build("prompttuner", SimConfig(max_gpus=32))
+    result = engine.run(jobs)
+
+Execution model (calibrated by §2.2's characterization):
+    finish = start + alloc_overhead [+ bank_lookup] + iters * iter_time(g)
+with near-linear scaling ``iter_time(g)`` from ``repro.core.jobs`` (comm
+is 0.4-0.5 % per extra replica — Fig 2a). Allocation is non-preemptive:
+the GPU count is fixed at job start, matching Algorithms 1/2 which decide
+allocations for *pending* jobs only. Scheduler rounds fire every
+``round_interval`` seconds (paper §5.3: 50 ms rounds; the default here is
+coarser purely to keep event counts small — results are insensitive below
+~1 s because job durations are seconds-to-minutes).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.jobs import (
+    GPU_PRICE_PER_S,
+    STORAGE_PRICE_PER_JOB_S,
+    Job,
+    JobPhase,
+    exec_time,
+)
+
+ARRIVAL, ROUND, JOB_DONE, WARM_READY = "arrival", "round", "job_done", "warm_ready"
+
+
+def bank_fits_budget(cfg: "SimConfig", bank_lookup_s: float,
+                     slo: float) -> bool:
+    """§4.4.3 latency budget: route through the Prompt Bank only if its
+    lookup latency fits within ``latency_budget_frac`` of the SLO. The
+    single implementation shared by the engine and the service facade."""
+    if not cfg.use_bank:
+        return False
+    if not cfg.use_latency_budget:
+        return True                    # Table 8: bank for EVERY request
+    return bank_lookup_s <= cfg.latency_budget_frac * slo
+
+
+@dataclass
+class SimConfig:
+    max_gpus: int = 32                 # cold-pool size / cluster size
+    round_interval: float = 0.5        # scheduler round period (s)
+    reclaim_window: float = 60.0       # idle warm GPU -> cold after this (s)
+    keep_alive: float = 60.0           # INFless instance keep-alive (s)
+    price_per_gpu_s: float = GPU_PRICE_PER_S
+    latency_budget_frac: float = 0.2   # §4.4.3
+    use_bank: bool = True              # prompt reusing on/off (Fig 8a/b)
+    use_warm: bool = True              # runtime reusing on/off
+    use_warm_allocator: bool = True    # simultaneous multi-GPU alloc (Table 8)
+    use_delay: bool = True             # DelaySchedulable on/off (Table 8)
+    use_latency_budget: bool = True    # Table 8 'w/o Latency Budget'
+    max_replicas_per_job: int = 16
+    best_effort: bool = True           # run SLO-infeasible jobs when idle
+
+
+@dataclass
+class JobRecord:
+    job: Job
+    gpus: int
+    used_bank: bool
+    start: float
+    finish: float
+    violated: bool
+    wait: float                        # queueing delay
+    init_overhead: float               # allocation / instance-init share
+
+
+@dataclass
+class SimResult:
+    records: List[JobRecord]
+    cost: float
+    gpu_seconds: float
+    makespan: float
+    util_samples: List[Tuple[float, float]] = field(default_factory=list)
+
+    @property
+    def slo_violation(self) -> float:
+        if not self.records:
+            return 0.0
+        return sum(r.violated for r in self.records) / len(self.records)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "jobs": len(self.records),
+            "slo_violation_pct": 100.0 * self.slo_violation,
+            "cost_usd": self.cost,
+            "gpu_seconds": self.gpu_seconds,
+            "makespan_s": self.makespan,
+        }
+
+
+class WarmPool:
+    """Per-LLM warm GPU pool: idle (with idle-since), warming (ready-at),
+    and busy counts. All GPUs in the pool are billed."""
+
+    def __init__(self) -> None:
+        self.idle: List[float] = []        # idle_since per idle GPU
+        self.warming: List[float] = []     # ready_at (heap)
+        self.busy: int = 0
+
+    def total(self) -> int:
+        return len(self.idle) + len(self.warming) + self.busy
+
+    def take_idle(self, n: int) -> int:
+        """Claim up to n idle GPUs; returns how many were claimed."""
+        n = min(n, len(self.idle))
+        # take the most recently idle ones (LIFO keeps cold candidates old)
+        for _ in range(n):
+            self.idle.pop()
+        self.busy += n
+        return n
+
+    def release(self, n: int, now: float) -> None:
+        self.busy -= n
+        assert self.busy >= 0
+        self.idle.extend([now] * n)
+
+    def mature(self, now: float) -> None:
+        """Move warming GPUs whose ready_at has passed into idle."""
+        ready = [t for t in self.warming if t <= now + 1e-9]
+        self.warming = [t for t in self.warming if t > now + 1e-9]
+        self.idle.extend([now] * len(ready))
+
+    def reclaim(self, now: float, window: float) -> int:
+        """Return idle GPUs unused for `window` seconds to the cold pool."""
+        keep = [t for t in self.idle if now - t < window]
+        n = len(self.idle) - len(keep)
+        self.idle = keep
+        return n
+
+
+class ResourceView:
+    """The resource API a scheduling policy acts through.
+
+    Read surface: ``now`` / ``cfg`` / ``cold_free`` / ``pending`` /
+    ``pool`` / ``running`` / ``release_timeline`` / ``slo_remaining`` /
+    ``use_bank_for``. Write verbs: ``start_job``, ``warm_up``,
+    ``claim_cold_busy``, ``return_cold``, ``release``,
+    ``mature_and_reclaim``. The verbs assert the engine's resource
+    invariants (cold pool non-negative, warm-pool counts conserved).
+    """
+
+    def __init__(self, engine: "ClusterEngine") -> None:
+        self._e = engine
+
+    # -- read surface --------------------------------------------------------
+
+    @property
+    def now(self) -> float:
+        return self._e.now
+
+    @property
+    def cfg(self) -> SimConfig:
+        return self._e.cfg
+
+    @property
+    def cold_free(self) -> int:
+        return self._e.cold_free
+
+    @property
+    def pending(self) -> Dict[str, List[Job]]:
+        """Live per-LLM pending queues. Policies admit a job by removing
+        it from its queue and calling :meth:`start_job` (or by replacing
+        the queue wholesale: ``view.pending[llm] = leftover``)."""
+        return self._e.pending
+
+    def pool(self, llm: str) -> WarmPool:
+        return self._e.pool(llm)
+
+    def pools(self) -> Dict[str, WarmPool]:
+        return self._e.pools
+
+    def running(self) -> Iterable[Tuple[Job, int]]:
+        return self._e.running.values()
+
+    def total_warm(self) -> int:
+        return sum(p.total() for p in self._e.pools.values())
+
+    def release_timeline(self, llm: str) -> List[float]:
+        """E_l (§4.4 Algorithm 2): earliest timestamps at which each warm
+        GPU of LLM ``llm`` becomes available — idle now, warming, or
+        released by running jobs at their **actual scheduled completion
+        events** (not a recomputed estimate, which can drift when the
+        start paid a different allocation overhead)."""
+        return self._e.release_timeline(llm)
+
+    def slo_remaining(self, job: Job) -> float:
+        return job.deadline - self._e.now
+
+    def use_bank_for(self, job: Job) -> bool:
+        return self._e.use_bank_for(job)
+
+    # -- write verbs ---------------------------------------------------------
+
+    def start_job(self, job: Job, gpus: int, alloc_overhead: float,
+                  used_bank: bool) -> None:
+        """Commit a job to run on ``gpus`` GPUs starting now. The caller
+        must already have claimed the GPUs (warm ``take_idle`` or a cold
+        verb); the engine schedules the completion event and bills."""
+        self._e.start_job(job, gpus, alloc_overhead, used_bank)
+
+    def warm_up(self, llm: str, n: int, ready_in: float) -> None:
+        """Grow ``llm``'s warm pool by ``n`` GPUs from the cold pool; they
+        become idle (schedulable) after ``ready_in`` seconds."""
+        if n > self._e.cold_free:
+            raise ValueError(
+                f"warm_up({llm}, {n}): only {self._e.cold_free} cold GPUs free")
+        self._e.cold_free -= n
+        self._e.pool(llm).warming.extend([self._e.now + ready_in] * n)
+
+    def claim_cold_busy(self, llm: str, n: int) -> None:
+        """Take ``n`` cold GPUs straight into ``llm``'s busy count (a cold
+        start that skips the warming state; the job pays the cold
+        overhead in its own execution time)."""
+        if n > self._e.cold_free:
+            raise ValueError(
+                f"claim_cold_busy({llm}, {n}): only {self._e.cold_free} free")
+        self._e.cold_free -= n
+        self._e.pool(llm).busy += n
+
+    def return_cold(self, llm: str, n: int) -> None:
+        """Return ``n`` busy GPUs of ``llm`` directly to the cold pool
+        (no warm reuse)."""
+        p = self._e.pool(llm)
+        if n > p.busy:
+            raise ValueError(f"return_cold({llm}, {n}): only {p.busy} busy")
+        p.busy -= n
+        self._e.cold_free += n
+
+    def release(self, llm: str, n: int) -> None:
+        """Release ``n`` busy GPUs of ``llm`` into its warm-idle set."""
+        self._e.pool(llm).release(n, self._e.now)
+
+    def mature_and_reclaim(self, window: float) -> int:
+        """Round upkeep: mature warming GPUs and reclaim those idle for
+        >= ``window`` seconds back to the cold pool. Returns the number
+        reclaimed."""
+        total = 0
+        for p in self._e.pools.values():
+            p.mature(self._e.now)
+            total += p.reclaim(self._e.now, window)
+        self._e.cold_free += total
+        return total
+
+
+class ClusterEngine:
+    """Event-driven cluster mechanism, driven by a pluggable policy.
+
+    ``ClusterEngine(cfg, policy)`` is the canonical form. For backwards
+    compatibility the engine can also be subclassed with ``_schedule``
+    overridden (the pre-registry ``ClusterSim`` contract); the legacy
+    hooks delegate to the policy when one is attached.
+    """
+
+    name = "base"
+
+    def __init__(self, cfg: SimConfig, policy: Optional[Any] = None):
+        self.cfg = cfg
+        self.policy = policy
+        if policy is not None and getattr(policy, "name", None):
+            self.name = policy.name
+        self.view = ResourceView(self)
+        self.now = 0.0
+        self._seq = itertools.count()
+        self._events: List[Tuple[float, int, str, Any]] = []
+        self.pending: Dict[str, List[Job]] = {}
+        self.running: Dict[int, Tuple[Job, int]] = {}    # job_id -> (job, gpus)
+        self._finish_at: Dict[int, float] = {}           # job_id -> scheduled done
+        self.records: List[JobRecord] = []
+        self.cost = 0.0
+        self.gpu_seconds = 0.0
+        self.cold_free = cfg.max_gpus
+        self.pools: Dict[str, WarmPool] = {}
+        self.util_samples: List[Tuple[float, float]] = []
+
+    # -- billing --------------------------------------------------------------
+
+    def billed_gpus(self) -> int:
+        """GPUs currently accruing cost. Default: all warm-pool GPUs."""
+        if self.policy is not None:
+            return self.policy.billed_gpus(self.view)
+        return sum(p.total() for p in self.pools.values())
+
+    def _advance(self, t: float) -> None:
+        dt = t - self.now
+        if dt > 0:
+            g = self.billed_gpus()
+            self.cost += g * dt * self.cfg.price_per_gpu_s
+            self.gpu_seconds += g * dt
+            self.now = t
+
+    # -- event plumbing --------------------------------------------------------
+
+    def _push(self, t: float, kind: str, payload: Any = None) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def pool(self, llm: str) -> WarmPool:
+        if llm not in self.pools:
+            self.pools[llm] = WarmPool()
+        return self.pools[llm]
+
+    # -- job lifecycle ----------------------------------------------------------
+
+    def use_bank_for(self, job: Job) -> bool:
+        """§4.4.3 latency budget applied to one job."""
+        return bank_fits_budget(self.cfg, job.profile().bank_lookup_s, job.slo)
+
+    def release_timeline(self, llm: str) -> List[float]:
+        """Earliest availability per warm GPU of ``llm``, ascending. Uses
+        the actual JOB_DONE events the engine has scheduled for running
+        jobs — the single source of truth for completion times."""
+        pool = self.pool(llm)
+        ts: List[float] = [self.now] * len(pool.idle)
+        ts.extend(pool.warming)
+        for job, gpus in self.running.values():
+            if job.llm != llm:
+                continue
+            release = self._finish_at.get(job.job_id, self.now)
+            ts.extend([max(release, self.now)] * gpus)
+        return sorted(ts)
+
+    def start_job(self, job: Job, gpus: int, alloc_overhead: float,
+                  used_bank: bool) -> None:
+        prof = job.profile()
+        dur = exec_time(job, gpus, used_bank=used_bank,
+                        alloc_overhead=alloc_overhead)
+        job.phase = JobPhase.RUNNING
+        job.start_time = self.now
+        job.gpus = gpus
+        job.used_bank = used_bank
+        job.init_overhead = alloc_overhead + (
+            prof.bank_lookup_s if used_bank else 0.0
+        )
+        self.running[job.job_id] = (job, gpus)
+        self._finish_at[job.job_id] = self.now + dur
+        self._push(self.now + dur, JOB_DONE, job)
+        if gpus > prof.gpus_per_replica:   # multi-replica => storage channel
+            self.cost += STORAGE_PRICE_PER_JOB_S * dur
+
+    def _complete(self, job: Job) -> None:
+        job.phase = JobPhase.DONE
+        job.finish_time = self.now
+        _, gpus = self.running.pop(job.job_id)
+        self._finish_at.pop(job.job_id, None)
+        self._on_job_done(job, gpus)
+        self.records.append(
+            JobRecord(
+                job=job,
+                gpus=gpus,
+                used_bank=job.used_bank,
+                start=job.start_time,
+                finish=self.now,
+                violated=self.now > job.deadline + 1e-9,
+                wait=job.start_time - job.submit_time,
+                init_overhead=job.init_overhead,
+            )
+        )
+
+    # -- policy hooks (overridable by legacy subclasses) -------------------------
+
+    def _on_job_done(self, job: Job, gpus: int) -> None:
+        if self.policy is not None:
+            self.policy.on_job_done(job, gpus, self.view)
+        else:
+            self.pool(job.llm).release(gpus, self.now)
+
+    def _schedule(self) -> None:
+        if self.policy is None:
+            raise NotImplementedError("attach a SchedulingPolicy or "
+                                      "override _schedule")
+        self.policy.on_round(self.view)
+
+    def _maintain(self) -> None:
+        """Round upkeep: mature warming GPUs, reclaim idle ones."""
+        if self.policy is not None:
+            self.policy.maintain(self.view)
+        else:
+            self.view.mature_and_reclaim(self.cfg.reclaim_window)
+
+    # -- main loop --------------------------------------------------------------------
+
+    def submit(self, job: Job) -> None:
+        """Enqueue an arrival (at its submit_time, or now if in the past).
+        Takes effect on the next :meth:`run` call."""
+        self._push(max(job.submit_time, self.now), ARRIVAL, job)
+
+    def run(self, jobs: Sequence[Job] = ()) -> SimResult:
+        """Drive the event loop until no work is outstanding. May be
+        called repeatedly (the service facade submits between calls);
+        time and records accumulate monotonically."""
+        for j in jobs:
+            self.submit(j)
+        self._push(self.now, ROUND)
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            self._advance(t)
+            if kind == ARRIVAL:
+                if payload.profile().gpus_per_replica > self.cfg.max_gpus:
+                    # physically unschedulable on this fleet: no policy can
+                    # ever place it — record the violation immediately
+                    # instead of spinning rounds to the 24 h horizon
+                    self.records.append(
+                        JobRecord(job=payload, gpus=0, used_bank=False,
+                                  start=float("inf"), finish=float("inf"),
+                                  violated=True, wait=float("inf"),
+                                  init_overhead=0.0)
+                    )
+                else:
+                    self.pending.setdefault(payload.llm, []).append(payload)
+            elif kind == JOB_DONE:
+                self._complete(payload)
+            elif kind == ROUND:
+                self._maintain()
+                self._schedule()
+                self.util_samples.append(
+                    (self.now, sum(g for _, g in self.running.values()))
+                )
+                outstanding = (
+                    any(self.pending.values())
+                    or self.running
+                    or any(k == ARRIVAL for _, _, k, _ in self._events)
+                )
+                if outstanding and self.now < 24 * 3600:   # hard horizon
+                    self._push(self.now + self.cfg.round_interval, ROUND)
+            elif kind == WARM_READY:
+                pass                       # pools mature lazily in _maintain
+        # drain: anything still pending at sim end is a violation
+        for q in self.pending.values():
+            for j in q:
+                self.records.append(
+                    JobRecord(job=j, gpus=0, used_bank=False,
+                              start=float("inf"), finish=float("inf"),
+                              violated=True, wait=float("inf"),
+                              init_overhead=0.0)
+                )
+            q.clear()
+        return SimResult(
+            records=self.records,
+            cost=self.cost,
+            gpu_seconds=self.gpu_seconds,
+            makespan=self.now,
+            util_samples=self.util_samples,
+        )
+
+
+# Deprecated alias: the pre-registry base class. Subclass ClusterEngine
+# (overriding _schedule) or, preferably, write a SchedulingPolicy.
+ClusterSim = ClusterEngine

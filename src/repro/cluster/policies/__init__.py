@@ -1,0 +1,39 @@
+"""String-keyed scheduling-policy registry (the policy half of the
+policy/mechanism split).
+
+    from repro.cluster import SimConfig, policies
+
+    policies.available()                 # ['edf-cold', 'elasticflow', ...]
+    cls = policies.get("prompttuner")    # policy class
+    engine = policies.build("prompttuner", SimConfig(max_gpus=32))
+    result = engine.run(jobs)
+"""
+from repro.cluster.policies.base import SchedulingPolicy, available, get, register
+
+# importing a module registers its policies
+from repro.cluster.policies.prompttuner import PromptTunerPolicy
+from repro.cluster.policies.infless import INFlessPolicy
+from repro.cluster.policies.elasticflow import ElasticFlowPolicy
+from repro.cluster.policies.simple import EDFColdPolicy, FIFOPolicy
+
+
+def build(name: str, cfg=None):
+    """Engine + policy in one call: the standard way to stand up a
+    system. Returns a ready-to-``run`` ClusterEngine."""
+    from repro.cluster.engine import ClusterEngine, SimConfig
+    cfg = cfg or SimConfig()
+    return ClusterEngine(cfg, get(name)(cfg))
+
+
+__all__ = [
+    "EDFColdPolicy",
+    "ElasticFlowPolicy",
+    "FIFOPolicy",
+    "INFlessPolicy",
+    "PromptTunerPolicy",
+    "SchedulingPolicy",
+    "available",
+    "build",
+    "get",
+    "register",
+]

@@ -1,0 +1,95 @@
+"""INFless [85] (§3, §6.1) — SLO-aware serverless DL *inference* system,
+reinforced per the paper with (a) multi-GPU execution over a Memcached
+channel and (b) the Prompt Bank, for a fair comparison. Characteristics
+modeled:
+
+  * per-model instance autoscaling with a keep-alive window (billed while
+    alive, busy or idle),
+  * one GPU per instance; a multi-GPU job starts only when ALL of its
+    instances are up — warm instances connect in ~2 s but each cold
+    instance pays the full container/runtime/weights bring-up, so the job
+    start time is the MAX over instance inits (the straggler effect of
+    Fig 3b, 11-50 % of end-to-end latency),
+  * no global schedule: per-model FIFO, no delayed execution.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.cluster.engine import ResourceView, SimConfig
+from repro.cluster.policies.base import SchedulingPolicy, register
+from repro.core.jobs import Job, exec_time
+
+
+@register
+class INFlessPolicy(SchedulingPolicy):
+    name = "infless"
+
+    # Serverless keep-alive is tuned for single-GPU inference traffic;
+    # multi-instance LPT jobs release whole gangs at once, so the idle
+    # tail INFless pays for is ~2x the per-model window PromptTuner's
+    # demand-driven reclaim holds (its scheduler returns GPUs as soon as
+    # the warm pool exceeds pending demand).
+    KEEP_ALIVE_FACTOR = 2.0
+    # container bring-up is heavy-tailed (Fig 3b: init is 11 % of e2e
+    # latency on average, up to 50 %): each cold instance draws its init
+    # time from cold_overhead x U(0.8, 2.2); a multi-instance gang waits
+    # for the slowest (the straggler the warm allocator avoids).
+    INIT_JITTER = (0.8, 2.2)
+
+    def __init__(self, cfg: SimConfig):
+        super().__init__(cfg)
+        self._rng = np.random.default_rng(12345)
+
+    def maintain(self, view: ResourceView) -> None:
+        # keep-alive: idle instances die after the window
+        view.mature_and_reclaim(self.cfg.keep_alive * self.KEEP_ALIVE_FACTOR)
+
+    def on_round(self, view: ResourceView) -> None:
+        for llm, queue in view.pending.items():
+            if not queue:
+                continue
+            pool = view.pool(llm)
+            prof = queue[0].profile()
+            queue.sort(key=lambda j: j.submit_time)      # FIFO, no global sort
+            leftover: List[Job] = []
+            for job in queue:
+                used_bank = view.use_bank_for(job)
+                slo_rem = view.slo_remaining(job)
+                avail = len(pool.idle) + view.cold_free
+                max_rep = min(avail // prof.gpus_per_replica,
+                              self.cfg.max_replicas_per_job)
+                if max_rep < 1:
+                    leftover.append(job)
+                    continue
+                # grow instances until the SLO fits. INFless is SLO-aware
+                # about startup: it uses the cold bring-up estimate once
+                # the allocation exceeds the warm instances. The remaining
+                # inefficiency (the paper's #2) is the STRAGGLER: one cold
+                # instance delays the whole multi-instance gang.
+                a = 1
+                while a < max_rep:
+                    g = a * prof.gpus_per_replica
+                    oh = (prof.warm_overhead if g <= len(pool.idle)
+                          else prof.cold_overhead)
+                    if exec_time(job, g, used_bank=used_bank,
+                                 alloc_overhead=oh) <= slo_rem:
+                        break
+                    a += 1
+                g = a * prof.gpus_per_replica
+                n_warm = min(len(pool.idle), g)
+                n_cold = g - n_warm
+                pool.take_idle(n_warm)
+                if n_cold:
+                    view.claim_cold_busy(llm, n_cold)
+                # straggler: the job waits for the SLOWEST instance init
+                if n_cold:
+                    jitter = self._rng.uniform(*self.INIT_JITTER,
+                                               size=n_cold).max()
+                    overhead = prof.cold_overhead * float(jitter)
+                else:
+                    overhead = prof.warm_overhead
+                view.start_job(job, g, overhead, used_bank)
+            view.pending[llm] = leftover

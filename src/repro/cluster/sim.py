@@ -1,280 +1,33 @@
-"""Discrete-event cluster simulator for LPT scheduling (§4.4, §6).
+"""Deprecated module kept for import compatibility.
 
-The simulator advances an event heap (arrivals / scheduler rounds / job
-completions / warm-up completions) and accrues resource cost continuously
-as ``billed_gpus * dt * price``. Systems (PromptTuner, INFless,
-ElasticFlow) subclass :class:`ClusterSim` and implement ``_schedule()``,
-which fires every ``round_interval`` seconds (paper §5.3: 50 ms rounds;
-the default here is coarser purely to keep event counts small — results
-are insensitive below ~1 s because job durations are seconds-to-minutes).
-
-Execution model (calibrated by §2.2's characterization):
-    finish = start + alloc_overhead [+ bank_lookup] + iters * iter_time(g)
-with near-linear scaling ``iter_time(g)`` from ``repro.core.jobs`` (comm
-is 0.4-0.5 % per extra replica — Fig 2a). Allocation is non-preemptive:
-the GPU count is fixed at job start, matching Algorithms 1/2 which decide
-allocations for *pending* jobs only.
+The discrete-event mechanism now lives in :mod:`repro.cluster.engine`
+(:class:`ClusterEngine` + :class:`ResourceView`); the system-specific
+scheduling logic lives in :mod:`repro.cluster.policies`. ``ClusterSim``
+remains as an alias of :class:`ClusterEngine` — legacy subclasses that
+override ``_schedule`` keep working, but new systems should be written
+as :class:`~repro.cluster.policies.SchedulingPolicy` classes and built
+via ``policies.build(name, cfg)``.
 """
-from __future__ import annotations
-
-import heapq
-import itertools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
-
-from repro.core.jobs import (
-    GPU_PRICE_PER_S,
-    LLM_PROFILES,
-    STORAGE_PRICE_PER_JOB_S,
-    Job,
-    JobPhase,
-    LLMProfile,
-    exec_time,
-    iter_time,
+from repro.cluster.engine import (
+    ARRIVAL,
+    JOB_DONE,
+    ROUND,
+    WARM_READY,
+    ClusterEngine,
+    ClusterSim,
+    JobRecord,
+    ResourceView,
+    SimConfig,
+    SimResult,
+    WarmPool,
 )
 
-ARRIVAL, ROUND, JOB_DONE, WARM_READY = "arrival", "round", "job_done", "warm_ready"
-
-
-@dataclass
-class SimConfig:
-    max_gpus: int = 32                 # cold-pool size / cluster size
-    round_interval: float = 0.5        # scheduler round period (s)
-    reclaim_window: float = 60.0       # idle warm GPU -> cold after this (s)
-    keep_alive: float = 60.0           # INFless instance keep-alive (s)
-    price_per_gpu_s: float = GPU_PRICE_PER_S
-    latency_budget_frac: float = 0.2   # §4.4.3
-    use_bank: bool = True              # prompt reusing on/off (Fig 8a/b)
-    use_warm: bool = True              # runtime reusing on/off
-    use_warm_allocator: bool = True    # simultaneous multi-GPU alloc (Table 8)
-    use_delay: bool = True             # DelaySchedulable on/off (Table 8)
-    use_latency_budget: bool = True    # Table 8 'w/o Latency Budget'
-    max_replicas_per_job: int = 16
-    best_effort: bool = True           # run SLO-infeasible jobs when idle
-
-
-@dataclass
-class JobRecord:
-    job: Job
-    gpus: int
-    used_bank: bool
-    start: float
-    finish: float
-    violated: bool
-    wait: float                        # queueing delay
-    init_overhead: float               # allocation / instance-init share
-
-
-@dataclass
-class SimResult:
-    records: List[JobRecord]
-    cost: float
-    gpu_seconds: float
-    makespan: float
-    util_samples: List[Tuple[float, float]] = field(default_factory=list)
-
-    @property
-    def slo_violation(self) -> float:
-        if not self.records:
-            return 0.0
-        return sum(r.violated for r in self.records) / len(self.records)
-
-    def summary(self) -> Dict[str, float]:
-        return {
-            "jobs": len(self.records),
-            "slo_violation_pct": 100.0 * self.slo_violation,
-            "cost_usd": self.cost,
-            "gpu_seconds": self.gpu_seconds,
-            "makespan_s": self.makespan,
-        }
-
-
-class WarmPool:
-    """Per-LLM warm GPU pool: idle (with idle-since), warming (ready-at),
-    and busy counts. All GPUs in the pool are billed."""
-
-    def __init__(self) -> None:
-        self.idle: List[float] = []        # idle_since per idle GPU
-        self.warming: List[float] = []     # ready_at (heap)
-        self.busy: int = 0
-
-    def total(self) -> int:
-        return len(self.idle) + len(self.warming) + self.busy
-
-    def take_idle(self, n: int) -> int:
-        """Claim up to n idle GPUs; returns how many were claimed."""
-        n = min(n, len(self.idle))
-        # take the most recently idle ones (LIFO keeps cold candidates old)
-        for _ in range(n):
-            self.idle.pop()
-        self.busy += n
-        return n
-
-    def release(self, n: int, now: float) -> None:
-        self.busy -= n
-        assert self.busy >= 0
-        self.idle.extend([now] * n)
-
-    def mature(self, now: float) -> None:
-        """Move warming GPUs whose ready_at has passed into idle."""
-        ready = [t for t in self.warming if t <= now + 1e-9]
-        self.warming = [t for t in self.warming if t > now + 1e-9]
-        self.idle.extend([now] * len(ready))
-
-    def reclaim(self, now: float, window: float) -> int:
-        """Return idle GPUs unused for `window` seconds to the cold pool."""
-        keep = [t for t in self.idle if now - t < window]
-        n = len(self.idle) - len(keep)
-        self.idle = keep
-        return n
-
-
-class ClusterSim:
-    """Event-driven base simulator; subclasses implement `_schedule`."""
-
-    name = "base"
-
-    def __init__(self, cfg: SimConfig):
-        self.cfg = cfg
-        self.now = 0.0
-        self._seq = itertools.count()
-        self._events: List[Tuple[float, int, str, Any]] = []
-        self.pending: Dict[str, List[Job]] = {}
-        self.running: Dict[int, Tuple[Job, int]] = {}    # job_id -> (job, gpus)
-        self.records: List[JobRecord] = []
-        self.cost = 0.0
-        self.gpu_seconds = 0.0
-        self.cold_free = cfg.max_gpus
-        self.pools: Dict[str, WarmPool] = {}
-        self.util_samples: List[Tuple[float, float]] = []
-        self._last_round = -1e9
-
-    # -- billing hooks --------------------------------------------------------
-
-    def billed_gpus(self) -> int:
-        """GPUs currently accruing cost. Default: all warm-pool GPUs."""
-        return sum(p.total() for p in self.pools.values())
-
-    def _advance(self, t: float) -> None:
-        dt = t - self.now
-        if dt > 0:
-            g = self.billed_gpus()
-            self.cost += g * dt * self.cfg.price_per_gpu_s
-            self.gpu_seconds += g * dt
-            self.now = t
-
-    # -- event plumbing --------------------------------------------------------
-
-    def _push(self, t: float, kind: str, payload: Any = None) -> None:
-        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
-
-    def pool(self, llm: str) -> WarmPool:
-        if llm not in self.pools:
-            self.pools[llm] = WarmPool()
-        return self.pools[llm]
-
-    # -- job lifecycle ----------------------------------------------------------
-
-    def use_bank_for(self, job: Job) -> bool:
-        """§4.4.3 latency budget: run the Prompt Bank only if its lookup
-        latency fits within 20 % of the job's latency SLO."""
-        if not self.cfg.use_bank:
-            return False
-        if not self.cfg.use_latency_budget:
-            return True                    # Table 8: bank for EVERY request
-        return job.profile().bank_lookup_s <= self.cfg.latency_budget_frac * job.slo
-
-    def start_job(self, job: Job, gpus: int, alloc_overhead: float,
-                  used_bank: bool) -> None:
-        prof = job.profile()
-        dur = exec_time(job, gpus, used_bank=used_bank,
-                        alloc_overhead=alloc_overhead)
-        job.phase = JobPhase.RUNNING
-        job.start_time = self.now
-        job.gpus = gpus
-        job.used_bank = used_bank
-        job.init_overhead = alloc_overhead + (
-            prof.bank_lookup_s if used_bank else 0.0
-        )
-        self.running[job.job_id] = (job, gpus)
-        self._push(self.now + dur, JOB_DONE, job)
-        if gpus > prof.gpus_per_replica:   # multi-replica => storage channel
-            self.cost += STORAGE_PRICE_PER_JOB_S * dur
-
-    def _complete(self, job: Job) -> None:
-        job.phase = JobPhase.DONE
-        job.finish_time = self.now
-        _, gpus = self.running.pop(job.job_id)
-        self._on_job_done(job, gpus)
-        self.records.append(
-            JobRecord(
-                job=job,
-                gpus=gpus,
-                used_bank=job.used_bank,
-                start=job.start_time,
-                finish=self.now,
-                violated=self.now > job.deadline + 1e-9,
-                wait=job.start_time - job.submit_time,
-                init_overhead=getattr(job, "init_overhead", 0.0),
-            )
-        )
-
-    # -- subclass hooks ------------------------------------------------------------
-
-    def _on_job_done(self, job: Job, gpus: int) -> None:
-        self.pool(job.llm).release(gpus, self.now)
-
-    def _schedule(self) -> None:
-        raise NotImplementedError
-
-    def _maintain(self) -> None:
-        """Round upkeep: mature warming GPUs, reclaim idle ones."""
-        for llm, p in self.pools.items():
-            p.mature(self.now)
-            n = p.reclaim(self.now, self.cfg.reclaim_window)
-            self.cold_free += n
-
-    # -- main loop --------------------------------------------------------------------
-
-    def run(self, jobs: List[Job]) -> SimResult:
-        for j in jobs:
-            self._push(j.submit_time, ARRIVAL, j)
-        self._push(0.0, ROUND)
-        while self._events:
-            t, _, kind, payload = heapq.heappop(self._events)
-            self._advance(t)
-            if kind == ARRIVAL:
-                self.pending.setdefault(payload.llm, []).append(payload)
-            elif kind == JOB_DONE:
-                self._complete(payload)
-            elif kind == ROUND:
-                self._maintain()
-                self._schedule()
-                self.util_samples.append(
-                    (self.now, sum(g for _, g in self.running.values()))
-                )
-                outstanding = (
-                    any(self.pending.values())
-                    or self.running
-                    or any(k == ARRIVAL for _, _, k, _ in self._events)
-                )
-                if outstanding and self.now < 24 * 3600:   # hard horizon
-                    self._push(self.now + self.cfg.round_interval, ROUND)
-            elif kind == WARM_READY:
-                pass                       # pools mature lazily in _maintain
-        # drain: anything still pending at sim end is a violation
-        for q in self.pending.values():
-            for j in q:
-                self.records.append(
-                    JobRecord(job=j, gpus=0, used_bank=False,
-                              start=float("inf"), finish=float("inf"),
-                              violated=True, wait=float("inf"),
-                              init_overhead=0.0)
-                )
-        return SimResult(
-            records=self.records,
-            cost=self.cost,
-            gpu_seconds=self.gpu_seconds,
-            makespan=self.now,
-            util_samples=self.util_samples,
-        )
+__all__ = [
+    "ClusterEngine",
+    "ClusterSim",
+    "JobRecord",
+    "ResourceView",
+    "SimConfig",
+    "SimResult",
+    "WarmPool",
+]

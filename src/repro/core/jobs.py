@@ -69,6 +69,7 @@ class Job:
     finish_time: Optional[float] = None
     gpus: int = 0
     used_bank: bool = False
+    init_overhead: float = 0.0     # allocation / instance-init share, set at start
 
     @property
     def deadline(self) -> float:

@@ -1,0 +1,74 @@
+"""Degraded fallback when `hypothesis` is not installed.
+
+Tier-1 must collect and run with the baked-in toolchain only. When the
+real library is present we re-export it untouched; otherwise `@given`
+runs each property test over a small deterministic sample drawn from
+lightweight stand-ins for the three strategies this suite uses
+(`integers`, `floats`, `sampled_from`). That keeps the properties
+exercised (shrinking and edge-case search are lost, which is acceptable
+for a fallback) instead of ERRORing the whole module at collection.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _FALLBACK_EXAMPLES = 10       # cap: the fallback is breadth, not depth
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class st:                     # noqa: N801 — mimics `strategies` module
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+    def settings(max_examples=_FALLBACK_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                rng = random.Random(0)
+                n = min(
+                    getattr(runner, "_max_examples", None)
+                    or getattr(fn, "_max_examples", _FALLBACK_EXAMPLES),
+                    _FALLBACK_EXAMPLES,
+                )
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # hide the drawn parameters from pytest's fixture resolution
+            del runner.__wrapped__
+            params = [p for name, p in
+                      inspect.signature(fn).parameters.items()
+                      if name not in strategies]
+            runner.__signature__ = inspect.Signature(params)
+            return runner
+
+        return deco

@@ -1,0 +1,153 @@
+"""PromptTunerService front door: latency-budget routing, bank lookup,
+scheduling, and online bank insertion (Fig 5b) end-to-end."""
+import numpy as np
+import pytest
+
+from repro.api import JobHandle, JobResult, PromptTunerService, SubmitRequest
+from repro.cluster import SimConfig
+from repro.core.jobs import LLM_PROFILES
+from repro.core.prompt_bank import PromptBank, PromptEntry, cosine_distance
+
+
+def _mk_bank(n=60, d=8, k=6, seed=0, capacity=3000):
+    """Synthetic bank: `k` gaussian feature blobs, one entry family per
+    blob (mirrors tests/test_prompt_bank.py)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d))
+    entries = []
+    for i in range(n):
+        c = i % k
+        feat = centers[c] + 0.05 * rng.normal(size=d)
+        entries.append(PromptEntry(
+            prompt=rng.normal(size=(4, d)).astype(np.float32),
+            feature=feat.astype(np.float32),
+            origin=f"blob{c}/v{i // k}",
+        ))
+    bank = PromptBank(capacity=capacity, num_clusters=k, seed=seed)
+    bank.add_candidates(entries)
+    bank.build()
+    return bank, centers
+
+
+def _score_factory(req):
+    """Eqn-1 stand-in: score = cosine distance of the entry's feature to
+    the request's feature (lower is better)."""
+    target = np.asarray(req.feature)
+
+    def score(entry):
+        return float(cosine_distance(entry.feature[None], target[None])[0, 0])
+
+    return score
+
+
+def _req(task_id, llm="gpt2-base", slo=300.0, feature=None, prompt=None,
+         iters_manual=200, iters_bank=60, submit_time=None):
+    return SubmitRequest(task_id=task_id, llm=llm, slo=slo,
+                         iters_manual=iters_manual, iters_bank=iters_bank,
+                         submit_time=submit_time, prompt=prompt,
+                         feature=feature)
+
+
+def test_latency_budget_routing():
+    svc = PromptTunerService(SimConfig(max_gpus=8))
+    prof = LLM_PROFILES["gpt2-base"]
+    tight = prof.bank_lookup_s / svc.cfg.latency_budget_frac - 1.0
+    loose = prof.bank_lookup_s / svc.cfg.latency_budget_frac + 1.0
+    assert svc.submit(_req("a", slo=loose)).routed_through_bank is True
+    assert svc.submit(_req("b", slo=tight)).routed_through_bank is False
+    # Table 8 'w/o Latency Budget': bank for every request
+    svc2 = PromptTunerService(SimConfig(max_gpus=8, use_latency_budget=False))
+    assert svc2.submit(_req("c", slo=tight)).routed_through_bank is True
+    svc3 = PromptTunerService(SimConfig(max_gpus=8, use_bank=False))
+    assert svc3.submit(_req("d", slo=loose)).routed_through_bank is False
+
+
+def test_submit_rejects_unknown_llm():
+    svc = PromptTunerService(SimConfig(max_gpus=8))
+    with pytest.raises(KeyError, match="unknown LLM"):
+        svc.submit(_req("a", llm="gpt5"))
+
+
+def test_end_to_end_bank_lookup_tune_insert():
+    """The Fig 5b loop: lookup picks a near-feature entry, the scheduler
+    runs the job, and the freshly tuned prompt lands back in the bank."""
+    bank, centers = _mk_bank()
+    size0 = len(bank)
+    svc = PromptTunerService(SimConfig(max_gpus=16), bank=bank,
+                             score_fn_factory=_score_factory)
+    rng = np.random.default_rng(1)
+    handles = []
+    for i in range(6):
+        blob = i % 3
+        feat = (centers[blob] + 0.05 * rng.normal(size=8)).astype(np.float32)
+        handles.append(svc.submit(_req(
+            f"task{i}", slo=300.0 + 10 * i, feature=feat,
+            prompt=rng.normal(size=(4, 8)).astype(np.float32),
+            submit_time=float(i))))
+    for h in handles:
+        assert isinstance(h, JobHandle)
+        assert h.routed_through_bank is True
+        # the two-layer lookup found the entry family nearest in feature
+        assert h.bank_origin is not None and h.bank_score is not None
+    results = svc.run_until_idle()
+    assert len(results) == 6
+    for r in results:
+        assert isinstance(r, JobResult)
+        assert r.completed and r.finish >= r.start >= r.handle.submitted_at
+        assert r.inserted_to_bank is True       # online insertion happened
+    assert len(bank) == size0 + 6
+    online = [e.origin for e in bank.entries if e.origin.endswith("/online")]
+    assert len(online) == 6
+    s = svc.summary()
+    assert s["jobs"] == 6 and s["cost_usd"] > 0
+
+
+def test_lookup_matches_request_feature_blob():
+    """Lookup quality: a request near blob b's center should get a blob-b
+    prompt back (the bank's two-layer search works through the facade)."""
+    bank, centers = _mk_bank(seed=3)
+    svc = PromptTunerService(SimConfig(max_gpus=8), bank=bank,
+                             score_fn_factory=_score_factory)
+    for blob in range(3):
+        h = svc.submit(_req(f"t{blob}", slo=500.0,
+                            feature=centers[blob].astype(np.float32)))
+        assert h.bank_origin.startswith(f"blob{blob}/")
+
+
+def test_incremental_submit_run_cycles():
+    """The facade supports submit -> run -> submit -> run; the clock and
+    records accumulate monotonically and nothing is double-reported."""
+    svc = PromptTunerService(SimConfig(max_gpus=8))
+    h1 = svc.submit(_req("a", slo=400.0))
+    first = svc.run_until_idle()
+    assert [r.handle.job_id for r in first] == [h1.job_id]
+    t_after_first = svc.now
+    h2 = svc.submit(_req("b", slo=400.0))        # submit_time defaults to now
+    assert h2.submitted_at == t_after_first
+    second = svc.run_until_idle()
+    assert [r.handle.job_id for r in second] == [h2.job_id]
+    assert svc.now >= t_after_first
+    assert svc.summary()["jobs"] == 2
+
+
+def test_service_is_policy_agnostic():
+    """Any registry policy gets the same front door."""
+    for name in ("fifo", "edf-cold", "elasticflow"):
+        svc = PromptTunerService(SimConfig(max_gpus=8), policy=name)
+        svc.submit(_req("a", slo=600.0))
+        res = svc.run_until_idle()
+        assert len(res) == 1 and res[0].completed, name
+
+
+def test_no_insert_without_tuned_prompt_payload():
+    """Requests without a tuned-prompt payload must not mutate the bank
+    (lookup still runs off the request feature)."""
+    bank, centers = _mk_bank()
+    size0 = len(bank)
+    svc = PromptTunerService(SimConfig(max_gpus=8), bank=bank,
+                             score_fn_factory=_score_factory)
+    svc.submit(_req("a", slo=400.0,
+                    feature=centers[0].astype(np.float32)))   # no prompt
+    res = svc.run_until_idle()
+    assert res[0].inserted_to_bank is False
+    assert len(bank) == size0

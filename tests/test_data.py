@@ -1,7 +1,7 @@
 """Synthetic task families + loader: layout, determinism, invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import (
     FAMILIES,

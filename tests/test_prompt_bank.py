@@ -1,7 +1,7 @@
 """Prompt Bank (§4.3): two-layer structure invariants + behaviour."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.prompt_bank import (
     PromptBank,

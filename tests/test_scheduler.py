@@ -2,17 +2,16 @@
 property tests over random traces."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.cluster import (
     SimConfig,
     TraceConfig,
     clone_jobs,
     generate_trace,
-    make_system,
+    policies,
 )
 from repro.core.jobs import LLM_PROFILES, Job, exec_time, iter_time
-from repro.core.scheduler import PromptTunerSim
 
 
 def _trace(load="medium", S=1.0, seed=0, minutes=5):
@@ -23,7 +22,7 @@ def _trace(load="medium", S=1.0, seed=0, minutes=5):
 def test_all_jobs_complete_and_accounted():
     jobs = _trace()
     for name in ("prompttuner", "infless", "elasticflow"):
-        res = make_system(name, SimConfig(max_gpus=32)).run(clone_jobs(jobs))
+        res = policies.build(name, SimConfig(max_gpus=32)).run(clone_jobs(jobs))
         assert len(res.records) == len(jobs), name
         finished = [r for r in res.records if np.isfinite(r.finish)]
         assert len(finished) == len(jobs), f"{name}: unfinished jobs"
@@ -34,7 +33,7 @@ def test_gpu_conservation_prompttuner():
     """warm pools + cold pool never exceed the fleet; nothing negative."""
     jobs = _trace(minutes=3)
     cfg = SimConfig(max_gpus=32)
-    sys_ = make_system("prompttuner", cfg)
+    sys_ = policies.build("prompttuner", cfg)
 
     orig = sys_._schedule
 
@@ -70,7 +69,7 @@ def test_exec_time_includes_bank_and_overhead():
 
 def test_latency_budget_gates_bank():
     cfg = SimConfig(max_gpus=8)
-    sys_ = make_system("prompttuner", cfg)
+    sys_ = policies.build("prompttuner", cfg)
     prof = LLM_PROFILES["gpt2-base"]
     slo_ok = prof.bank_lookup_s / cfg.latency_budget_frac + 1.0
     slo_bad = prof.bank_lookup_s / cfg.latency_budget_frac - 1.0
@@ -82,9 +81,9 @@ def test_latency_budget_gates_bank():
 
 def test_bank_reduces_cost_and_violation():
     jobs = _trace(load="high", S=0.8, minutes=5)
-    on = make_system("prompttuner", SimConfig(max_gpus=24)).run(
+    on = policies.build("prompttuner", SimConfig(max_gpus=24)).run(
         clone_jobs(jobs)).summary()
-    off = make_system("prompttuner",
+    off = policies.build("prompttuner",
                       SimConfig(max_gpus=24, use_bank=False)).run(
         clone_jobs(jobs)).summary()
     assert on["slo_violation_pct"] <= off["slo_violation_pct"]
@@ -93,9 +92,9 @@ def test_bank_reduces_cost_and_violation():
 
 def test_delay_schedulable_reduces_cost():
     jobs = _trace(load="high", S=1.2, minutes=5)
-    with_delay = make_system("prompttuner", SimConfig(max_gpus=24)).run(
+    with_delay = policies.build("prompttuner", SimConfig(max_gpus=24)).run(
         clone_jobs(jobs)).summary()
-    without = make_system(
+    without = policies.build(
         "prompttuner", SimConfig(max_gpus=24, use_delay=False)).run(
         clone_jobs(jobs)).summary()
     assert with_delay["cost_usd"] <= without["cost_usd"] * 1.05
@@ -103,9 +102,9 @@ def test_delay_schedulable_reduces_cost():
 
 def test_warm_reuse_beats_cold_only():
     jobs = _trace(load="medium", S=0.6, minutes=5)
-    warm = make_system("prompttuner", SimConfig(max_gpus=24)).run(
+    warm = policies.build("prompttuner", SimConfig(max_gpus=24)).run(
         clone_jobs(jobs)).summary()
-    no_warm = make_system(
+    no_warm = policies.build(
         "prompttuner", SimConfig(max_gpus=24, use_warm=False)).run(
         clone_jobs(jobs)).summary()
     assert warm["slo_violation_pct"] <= no_warm["slo_violation_pct"]
@@ -114,7 +113,7 @@ def test_warm_reuse_beats_cold_only():
 def test_elasticflow_bills_full_cluster():
     jobs = _trace(minutes=2)
     cfg = SimConfig(max_gpus=16)
-    res = make_system("elasticflow", cfg).run(clone_jobs(jobs))
+    res = policies.build("elasticflow", cfg).run(clone_jobs(jobs))
     expected = cfg.max_gpus * res.makespan * cfg.price_per_gpu_s
     assert res.cost == pytest.approx(expected, rel=0.05)
 
@@ -124,7 +123,7 @@ def test_prompttuner_beats_baselines_end_to_end():
     jobs = _trace(load="medium", S=1.0, seed=1, minutes=10)
     out = {}
     for name in ("prompttuner", "infless", "elasticflow"):
-        out[name] = make_system(name, SimConfig(max_gpus=32)).run(
+        out[name] = policies.build(name, SimConfig(max_gpus=32)).run(
             clone_jobs(jobs)).summary()
     assert (out["prompttuner"]["slo_violation_pct"]
             <= out["infless"]["slo_violation_pct"])
@@ -141,7 +140,7 @@ def test_sim_invariants_random_traces(seed, gpus, S):
     replica units."""
     jobs = generate_trace(TraceConfig(load="low", slo_emergence=S,
                                       seed=seed, minutes=3))
-    res = make_system("prompttuner", SimConfig(max_gpus=gpus)).run(
+    res = policies.build("prompttuner", SimConfig(max_gpus=gpus)).run(
         clone_jobs(jobs))
     assert len(res.records) == len(jobs)
     seen = set()
