@@ -20,6 +20,7 @@ from benchmarks import (
     bench_heavy,
     bench_inefficiency,
     bench_kernels,
+    bench_multitenant,
     bench_sweeps,
     bench_table1,
     roofline_table,
@@ -35,6 +36,7 @@ BENCHES = {
     "heavy": bench_heavy,                         # Table 7
     "ablation": bench_ablation,                   # Table 8, Fig 8a/b
     "sweeps": bench_sweeps,                       # Fig 8c/d
+    "multitenant": bench_multitenant,             # tenant mix x shard counts
     "table1": bench_table1,                       # Table 1
     "kernels": bench_kernels,                     # kernel paths
     "roofline": roofline_table,                   # §Roofline (dry-run)

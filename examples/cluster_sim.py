@@ -2,20 +2,30 @@
 every registered scheduling policy; report SLO violations + cost.
 
     PYTHONPATH=src python examples/cluster_sim.py [--load medium] [--S 1.0]
+    PYTHONPATH=src python examples/cluster_sim.py --tenants --shards 4
 
 Policies come from the string-keyed registry — adding a new system is
 one class in ``repro/cluster/policies/`` and it shows up here for free.
+With ``--shards N`` each policy runs over an N-shard ClusterFabric
+(``--placement`` picks the shard-placement strategy); ``--tenants``
+switches to the 3-tenant premium/standard/best-effort mix and prints the
+per-tenant breakdown.
 """
 import argparse
 import sys
+from dataclasses import replace
 
 sys.path.insert(0, "src")
 
 from repro.cluster import (
+    ClusterFabric,
+    DEFAULT_TENANT_MIX,
     SimConfig,
     TraceConfig,
     clone_jobs,
+    generate_tenant_mix,
     generate_trace,
+    placements,
     policies,
 )
 
@@ -29,24 +39,48 @@ def main():
                     help="SLO emergence (smaller = more stringent)")
     ap.add_argument("--gpus", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="fabric shard count (1 = monolithic engine)")
+    ap.add_argument("--placement", default="llm-affinity",
+                    choices=placements())
+    ap.add_argument("--tenants", action="store_true",
+                    help="3-tenant premium/standard/best-effort mix")
     ap.add_argument("--policies", nargs="*", default=policies.available(),
                     help=f"subset of {policies.available()}")
     args = ap.parse_args()
 
-    jobs = generate_trace(TraceConfig(load=args.load, slo_emergence=args.S,
-                                      seed=args.seed))
-    print(f"trace: {len(jobs)} LPT jobs over 20 min "
-          f"(load={args.load}, S={args.S}, fleet={args.gpus} GPUs)\n")
+    if args.tenants:
+        # per-tenant loads come from the mix spec; --S still applies
+        mix = [replace(t, slo_emergence=args.S) for t in DEFAULT_TENANT_MIX]
+        jobs = generate_tenant_mix(mix, seed=args.seed)
+        desc = (f"3-tenant mix (per-tenant loads: "
+                f"{', '.join(f'{t.name}={t.load}x{t.scale}' for t in mix)}"
+                f", S={args.S}; --load ignored)")
+    else:
+        jobs = generate_trace(TraceConfig(load=args.load,
+                                          slo_emergence=args.S,
+                                          seed=args.seed))
+        desc = f"load={args.load}, S={args.S}"
+    print(f"trace: {len(jobs)} LPT jobs over 20 min ({desc}, "
+          f"fleet={args.gpus} GPUs, shards={args.shards}/"
+          f"{args.placement})\n")
     print(f"{'policy':14s} {'SLO viol %':>10s} {'cost $':>8s} "
           f"{'GPU-hours':>10s}")
     for name in args.policies:
-        res = policies.build(name, SimConfig(max_gpus=args.gpus)).run(
-            clone_jobs(jobs))
+        fab = ClusterFabric(SimConfig(max_gpus=args.gpus), name,
+                            shards=args.shards, placement=args.placement)
+        res = fab.run(clone_jobs(jobs))
         s = res.summary()
         print(f"{name:14s} {s['slo_violation_pct']:10.1f} "
               f"{s['cost_usd']:8.2f} {s['gpu_seconds'] / 3600:10.1f}")
+        if args.tenants and name == "prompttuner":
+            for tenant, row in res.summary_by_tenant().items():
+                print(f"  · {tenant:12s} {row['slo_violation_pct']:10.1f} "
+                      f"{row['cost_usd']:8.2f} "
+                      f"{row['gpu_seconds'] / 3600:10.1f}")
     print("\n(prompttuner = warm/cold pools + Algorithms 1&2 + "
-          "DelaySchedulable + Prompt Bank latency budget)")
+          "DelaySchedulable + Prompt Bank latency budget; per-tenant "
+          "rows bill at the class price tier)")
 
 
 if __name__ == "__main__":

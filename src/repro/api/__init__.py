@@ -2,10 +2,17 @@
 system the paper describes. See :class:`PromptTunerService`."""
 from repro.api.service import PromptTunerService
 from repro.api.types import JobHandle, JobResult, SubmitRequest
+from repro.cluster.engine import EngineEvent
+from repro.cluster.fabric import ClusterFabric
+from repro.core.jobs import SLO_CLASSES, SLOClass
 
 __all__ = [
+    "ClusterFabric",
+    "EngineEvent",
     "JobHandle",
     "JobResult",
     "PromptTunerService",
+    "SLOClass",
+    "SLO_CLASSES",
     "SubmitRequest",
 ]

@@ -2,9 +2,11 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
+
+from repro.core.jobs import DEFAULT_TENANT, SLOClass
 
 
 @dataclass
@@ -15,6 +17,14 @@ class SubmitRequest:
     the user's manual initial prompt vs. a bank-provided one (in the full
     testbed they come out of real tuning runs; the trace generator
     synthesizes them from the calibration distributions).
+
+    ``tenant`` / ``slo_class`` identify who submitted and which service
+    class they bought: the class's SLO multiplier scales ``slo`` (premium
+    tightens, best-effort relaxes), its priority orders admission, and
+    its price tier scales the tenant's billing ledger. ``slo_class``
+    accepts a catalogue name (``premium`` / ``standard`` /
+    ``best-effort``) or an :class:`~repro.core.jobs.SLOClass`; omitted
+    means the standard single-tenant behaviour, unchanged.
 
     ``prompt`` / ``feature`` optionally carry the freshly tuned soft
     prompt and its activation feature; when present, the service inserts
@@ -29,6 +39,8 @@ class SubmitRequest:
     iters_bank: int
     submit_time: Optional[float] = None    # None => service clock "now"
     max_iters: int = 10_000
+    tenant: str = DEFAULT_TENANT
+    slo_class: Optional[Union[str, SLOClass]] = None
     prompt: Optional[np.ndarray] = None
     feature: Optional[np.ndarray] = None
 
@@ -42,6 +54,10 @@ class JobHandle:
     llm: str
     submitted_at: float
     routed_through_bank: bool          # §4.4.3 latency-budget decision
+    tenant: str = DEFAULT_TENANT
+    slo_class: str = "standard"        # resolved service-class name
+    shard: int = 0                     # fabric shard the job was placed on
+    effective_slo: Optional[float] = None  # slo x class multiplier (s)
     bank_origin: Optional[str] = None  # origin of the looked-up initial prompt
     bank_score: Optional[float] = None # its Eqn-1 score
     initial_prompt: Optional[np.ndarray] = None  # the prompt itself, for tuning

@@ -1,19 +1,25 @@
 from repro.cluster.engine import (
     ClusterEngine,
     ClusterSim,
+    EngineEvent,
     JobRecord,
     ResourceView,
+    SHARED_POOL,
     SimConfig,
     SimResult,
     WarmPool,
 )
 from repro.cluster import policies
 from repro.cluster.policies import SchedulingPolicy
+from repro.cluster.fabric import ClusterFabric, placements, register_placement
 from repro.cluster.trace import (
     clone_jobs,
+    DEFAULT_TENANT_MIX,
     LOADS,
     HEAVY_LOADS,
+    TenantSpec,
     TraceConfig,
+    generate_tenant_mix,
     generate_trace,
     load_calibration,
 )
@@ -21,21 +27,29 @@ from repro.cluster.baselines import ElasticFlowSim, INFlessSim, make_system
 
 __all__ = [
     "ClusterEngine",
+    "ClusterFabric",
     "ClusterSim",
+    "DEFAULT_TENANT_MIX",
     "ElasticFlowSim",
+    "EngineEvent",
     "HEAVY_LOADS",
     "INFlessSim",
     "JobRecord",
     "LOADS",
     "ResourceView",
+    "SHARED_POOL",
     "SchedulingPolicy",
     "SimConfig",
     "SimResult",
+    "TenantSpec",
     "TraceConfig",
     "WarmPool",
     "clone_jobs",
+    "generate_tenant_mix",
     "generate_trace",
     "load_calibration",
     "make_system",
+    "placements",
     "policies",
+    "register_placement",
 ]

@@ -3,11 +3,13 @@
 This module is the **mechanism** half of the policy/mechanism split:
 
 * :class:`ClusterEngine` advances an event heap (arrivals / scheduler
-  rounds / job completions / warm-up completions) and accrues resource
-  cost continuously as ``billed_gpus * dt * price``. It owns the pending
-  queues, the per-LLM warm pools, the shared cold pool, and the billing
-  and record-keeping — and contains **no system-specific scheduling
-  logic**.
+  rounds / job completions) one :meth:`~ClusterEngine.step` at a time
+  and accrues resource cost continuously as ``billed_gpus * dt * price``
+  — globally and per tenant. It owns the pending queues, the per-LLM
+  warm pools, the shared cold pool, and the billing and record-keeping —
+  and contains **no system-specific scheduling logic**. Each processed
+  event is also published to ``on_event`` subscribers as a typed
+  :class:`EngineEvent` (service-level streaming).
 * :class:`ResourceView` is the narrow API a
   :class:`~repro.cluster.policies.SchedulingPolicy` sees each round:
   pending queues, warm pools, cold capacity, release timelines, and the
@@ -38,17 +40,49 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Iterable,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 from repro.core.jobs import (
     GPU_PRICE_PER_S,
     STORAGE_PRICE_PER_JOB_S,
     Job,
     JobPhase,
+    SLOClass,
     exec_time,
 )
 
-ARRIVAL, ROUND, JOB_DONE, WARM_READY = "arrival", "round", "job_done", "warm_ready"
+ARRIVAL, ROUND, JOB_DONE = "arrival", "round", "job_done"
+
+# Ledger key for provisioned-but-not-busy capacity (idle / warming warm
+# GPUs): billed globally, attributable to no single tenant.
+SHARED_POOL = "(shared-pool)"
+
+
+@dataclass(frozen=True)
+class EngineEvent:
+    """One observable engine transition, delivered to ``on_event``
+    subscribers in simulated-time order.
+
+    ``kind`` is one of :data:`ARRIVAL` (a job entered the pending
+    queues), :data:`ROUND` (a scheduler round ran), :data:`JOB_DONE`
+    (a job completed — exactly one per completed job). ``shard`` is 0
+    for a bare engine; :class:`~repro.cluster.fabric.ClusterFabric`
+    rewrites it to the originating shard index when forwarding.
+    """
+
+    kind: str
+    time: float
+    job: Optional[Job] = None
+    shard: int = 0
 
 
 def bank_fits_budget(cfg: "SimConfig", bank_lookup_s: float,
@@ -99,6 +133,8 @@ class SimResult:
     gpu_seconds: float
     makespan: float
     util_samples: List[Tuple[float, float]] = field(default_factory=list)
+    cost_by_tenant: Dict[str, float] = field(default_factory=dict)
+    gpu_seconds_by_tenant: Dict[str, float] = field(default_factory=dict)
 
     @property
     def slo_violation(self) -> float:
@@ -114,6 +150,29 @@ class SimResult:
             "gpu_seconds": self.gpu_seconds,
             "makespan_s": self.makespan,
         }
+
+    def summary_by_tenant(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant SLO/billing breakdown: the tenant's own jobs and
+        violations plus its share of the cost/GPU-second ledgers (busy
+        time at the tenant's price tier; the :data:`SHARED_POOL` row
+        carries idle/warming capacity attributable to no tenant)."""
+        per: Dict[str, List[JobRecord]] = {}
+        for r in self.records:
+            per.setdefault(r.job.tenant, []).append(r)
+        tenants = set(per) | set(self.cost_by_tenant) | set(
+            self.gpu_seconds_by_tenant)
+        out: Dict[str, Dict[str, float]] = {}
+        for t in sorted(tenants):
+            recs = per.get(t, [])
+            out[t] = {
+                "jobs": len(recs),
+                "slo_violation_pct": (
+                    100.0 * sum(r.violated for r in recs) / len(recs)
+                    if recs else 0.0),
+                "cost_usd": self.cost_by_tenant.get(t, 0.0),
+                "gpu_seconds": self.gpu_seconds_by_tenant.get(t, 0.0),
+            }
+        return out
 
 
 class WarmPool:
@@ -161,7 +220,8 @@ class ResourceView:
 
     Read surface: ``now`` / ``cfg`` / ``cold_free`` / ``pending`` /
     ``pool`` / ``running`` / ``release_timeline`` / ``slo_remaining`` /
-    ``use_bank_for``. Write verbs: ``start_job``, ``warm_up``,
+    ``slo_class_of`` / ``tenant_of`` / ``tenants`` / ``use_bank_for``.
+    Write verbs: ``start_job``, ``warm_up``,
     ``claim_cold_busy``, ``return_cold``, ``release``,
     ``mature_and_reclaim``. The verbs assert the engine's resource
     invariants (cold pool non-negative, warm-pool counts conserved).
@@ -213,6 +273,20 @@ class ResourceView:
 
     def slo_remaining(self, job: Job) -> float:
         return job.deadline - self._e.now
+
+    def slo_class_of(self, job: Job) -> SLOClass:
+        """The job's service class (priority / price tier / stringency) —
+        the hook class-aware policies order admission by."""
+        return job.slo_class
+
+    def tenant_of(self, job: Job) -> str:
+        return job.tenant
+
+    def tenants(self) -> List[str]:
+        """Tenants with work currently pending or running, sorted."""
+        names = {j.tenant for q in self._e.pending.values() for j in q}
+        names.update(j.tenant for j, _ in self._e.running.values())
+        return sorted(names)
 
     def use_bank_for(self, job: Job) -> bool:
         return self._e.use_bank_for(job)
@@ -296,9 +370,29 @@ class ClusterEngine:
         self.records: List[JobRecord] = []
         self.cost = 0.0
         self.gpu_seconds = 0.0
+        self.cost_by_tenant: Dict[str, float] = {}
+        self.gpu_seconds_by_tenant: Dict[str, float] = {}
         self.cold_free = cfg.max_gpus
         self.pools: Dict[str, WarmPool] = {}
         self.util_samples: List[Tuple[float, float]] = []
+        self.outstanding_jobs = 0      # submitted, not yet recorded
+        self._subscribers: List[Callable[[EngineEvent], None]] = []
+
+    # -- event stream ---------------------------------------------------------
+
+    def on_event(self, cb: Callable[[EngineEvent], None]) -> None:
+        """Subscribe ``cb`` to the engine's event stream. It is called
+        synchronously, in simulated-time order, with one
+        :class:`EngineEvent` per ARRIVAL / ROUND / JOB_DONE transition
+        (exactly one JOB_DONE per completed job)."""
+        self._subscribers.append(cb)
+
+    def _emit(self, kind: str, job: Optional[Job] = None) -> None:
+        if not self._subscribers:
+            return
+        ev = EngineEvent(kind=kind, time=self.now, job=job)
+        for cb in self._subscribers:
+            cb(ev)
 
     # -- billing --------------------------------------------------------------
 
@@ -369,6 +463,21 @@ class ClusterEngine:
         job.finish_time = self.now
         _, gpus = self.running.pop(job.job_id)
         self._finish_at.pop(job.job_id, None)
+        self.outstanding_jobs -= 1
+        # Per-tenant ledger, alongside the global one. A job's GPU count
+        # is fixed for its whole [start, finish] span, so the tenant's
+        # busy share accrues once here (at the class price tier) instead
+        # of taxing every _advance; result() derives the idle remainder
+        # as the shared-pool row.
+        dur = self.now - job.start_time
+        if dur > 0:
+            self.gpu_seconds_by_tenant[job.tenant] = (
+                self.gpu_seconds_by_tenant.get(job.tenant, 0.0)
+                + gpus * dur)
+            self.cost_by_tenant[job.tenant] = (
+                self.cost_by_tenant.get(job.tenant, 0.0)
+                + gpus * dur * self.cfg.price_per_gpu_s
+                * job.slo_class.price_tier)
         self._on_job_done(job, gpus)
         self.records.append(
             JobRecord(
@@ -382,6 +491,7 @@ class ClusterEngine:
                 init_overhead=job.init_overhead,
             )
         )
+        self._emit(JOB_DONE, job)
 
     # -- policy hooks (overridable by legacy subclasses) -------------------------
 
@@ -408,50 +518,69 @@ class ClusterEngine:
 
     def submit(self, job: Job) -> None:
         """Enqueue an arrival (at its submit_time, or now if in the past).
-        Takes effect on the next :meth:`run` call."""
+        Takes effect on the next :meth:`run` / :meth:`step` cycle."""
+        self.outstanding_jobs += 1
         self._push(max(job.submit_time, self.now), ARRIVAL, job)
 
-    def run(self, jobs: Sequence[Job] = ()) -> SimResult:
-        """Drive the event loop until no work is outstanding. May be
-        called repeatedly (the service facade submits between calls);
-        time and records accumulate monotonically."""
+    def begin(self, jobs: Sequence[Job] = ()) -> None:
+        """Submit ``jobs`` and arm the scheduler-round clock. Follow with
+        :meth:`step` until it returns False, then :meth:`finish`."""
         for j in jobs:
             self.submit(j)
         self._push(self.now, ROUND)
-        while self._events:
-            t, _, kind, payload = heapq.heappop(self._events)
-            self._advance(t)
-            if kind == ARRIVAL:
-                if payload.profile().gpus_per_replica > self.cfg.max_gpus:
-                    # physically unschedulable on this fleet: no policy can
-                    # ever place it — record the violation immediately
-                    # instead of spinning rounds to the 24 h horizon
-                    self.records.append(
-                        JobRecord(job=payload, gpus=0, used_bank=False,
-                                  start=float("inf"), finish=float("inf"),
-                                  violated=True, wait=float("inf"),
-                                  init_overhead=0.0)
-                    )
-                else:
-                    self.pending.setdefault(payload.llm, []).append(payload)
-            elif kind == JOB_DONE:
-                self._complete(payload)
-            elif kind == ROUND:
-                self._maintain()
-                self._schedule()
-                self.util_samples.append(
-                    (self.now, sum(g for _, g in self.running.values()))
+
+    def has_events(self) -> bool:
+        return bool(self._events)
+
+    def next_event_time(self) -> Optional[float]:
+        """Timestamp of the next queued event (None when drained). Lets a
+        fabric interleave several shards in global time order."""
+        return self._events[0][0] if self._events else None
+
+    def step(self) -> bool:
+        """Process exactly one event (advance time, dispatch, notify
+        subscribers). Returns False when the event heap is empty."""
+        if not self._events:
+            return False
+        t, _, kind, payload = heapq.heappop(self._events)
+        self._advance(t)
+        if kind == ARRIVAL:
+            if payload.profile().gpus_per_replica > self.cfg.max_gpus:
+                # physically unschedulable on this fleet: no policy can
+                # ever place it — record the violation immediately
+                # instead of spinning rounds to the 24 h horizon
+                self.records.append(
+                    JobRecord(job=payload, gpus=0, used_bank=False,
+                              start=float("inf"), finish=float("inf"),
+                              violated=True, wait=float("inf"),
+                              init_overhead=0.0)
                 )
-                outstanding = (
-                    any(self.pending.values())
-                    or self.running
-                    or any(k == ARRIVAL for _, _, k, _ in self._events)
-                )
-                if outstanding and self.now < 24 * 3600:   # hard horizon
-                    self._push(self.now + self.cfg.round_interval, ROUND)
-            elif kind == WARM_READY:
-                pass                       # pools mature lazily in _maintain
-        # drain: anything still pending at sim end is a violation
+                self.outstanding_jobs -= 1
+            else:
+                self.pending.setdefault(payload.llm, []).append(payload)
+            self._emit(ARRIVAL, payload)
+        elif kind == JOB_DONE:
+            self._complete(payload)
+        elif kind == ROUND:
+            self._maintain()
+            self._schedule()
+            self.util_samples.append(
+                (self.now, sum(g for _, g in self.running.values()))
+            )
+            outstanding = (
+                any(self.pending.values())
+                or self.running
+                or any(k == ARRIVAL for _, _, k, _ in self._events)
+            )
+            if outstanding and self.now < 24 * 3600:   # hard horizon
+                self._push(self.now + self.cfg.round_interval, ROUND)
+            self._emit(ROUND)
+        return True
+
+    def finish(self) -> SimResult:
+        """Close out a (possibly partial) run: anything still pending is
+        recorded as an SLO violation, and the accumulated result is
+        returned. Running again later continues from this state."""
         for q in self.pending.values():
             for j in q:
                 self.records.append(
@@ -460,14 +589,42 @@ class ClusterEngine:
                               violated=True, wait=float("inf"),
                               init_overhead=0.0)
                 )
+                self.outstanding_jobs -= 1
             q.clear()
+        return self.result()
+
+    def result(self) -> SimResult:
+        """The accumulated SimResult so far (no draining side effects).
+
+        The shared-pool ledger row is derived here: whatever slice of
+        the globally billed GPU-seconds is not attributed to a tenant's
+        completed jobs — idle/warming warm capacity, a static cluster's
+        slack, and (mid-run) still-running jobs whose busy time settles
+        onto their tenant at completion."""
+        gpu_bt = dict(self.gpu_seconds_by_tenant)
+        cost_bt = dict(self.cost_by_tenant)
+        shared_s = self.gpu_seconds - sum(gpu_bt.values())
+        if shared_s > 1e-9:
+            gpu_bt[SHARED_POOL] = shared_s
+            cost_bt[SHARED_POOL] = shared_s * self.cfg.price_per_gpu_s
         return SimResult(
             records=self.records,
             cost=self.cost,
             gpu_seconds=self.gpu_seconds,
             makespan=self.now,
             util_samples=self.util_samples,
+            cost_by_tenant=cost_bt,
+            gpu_seconds_by_tenant=gpu_bt,
         )
+
+    def run(self, jobs: Sequence[Job] = ()) -> SimResult:
+        """Drive the event loop until no work is outstanding. May be
+        called repeatedly (the service facade submits between calls);
+        time and records accumulate monotonically."""
+        self.begin(jobs)
+        while self.step():
+            pass
+        return self.finish()
 
 
 # Deprecated alias: the pre-registry base class. Subclass ClusterEngine

@@ -1,0 +1,230 @@
+"""Multi-tenant sharded cluster fabric.
+
+A :class:`ClusterFabric` composes N independent :class:`ClusterEngine`
+shards behind one submit/run surface — the ROADMAP's "sharded /
+multi-cluster engines behind the same ``ResourceView``". Each shard is
+a full engine with its own slice of the GPU fleet, its own warm/cold
+pools, and its own policy instance, so every registered
+:class:`~repro.cluster.policies.SchedulingPolicy` runs unmodified per
+shard.
+
+Placement (which shard a submitted job lands on) is a pluggable layer
+with its own string-keyed registry:
+
+* ``llm-affinity`` (default) — jobs of the same LLM share a shard, so
+  warm runtimes consolidate instead of fragmenting across the fleet;
+* ``least-loaded`` — the shard with the least outstanding work at
+  submit time (pending queue depth + committed running GPUs);
+* ``hash`` — uniform stable hash of (tenant, job id): tenant-striped,
+  placement-oblivious.
+
+Execution interleaves the shards' event loops in **global simulated-time
+order** (the shard with the earliest next event steps first), so an
+``on_event`` subscriber observes one time-ordered stream across the
+whole fabric, each event stamped with its shard index.
+
+Golden equivalence: ``ClusterFabric(cfg, shards=1)`` is exactly one
+``ClusterEngine(cfg)`` — same events, same float-for-float summaries —
+which is what pins this layer to the pre-fabric behaviour in
+``tests/test_fabric.py``.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import replace
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.cluster.engine import (
+    ClusterEngine,
+    EngineEvent,
+    SimConfig,
+    SimResult,
+)
+from repro.core.jobs import Job
+
+PlacementFn = Callable[[Job, Sequence[ClusterEngine]], int]
+
+_PLACEMENTS: Dict[str, PlacementFn] = {}
+
+
+def register_placement(name: str):
+    """Decorator: add a ``(job, shards) -> shard_index`` strategy to the
+    placement registry under ``name``."""
+
+    def deco(fn: PlacementFn) -> PlacementFn:
+        _PLACEMENTS[name] = fn
+        return fn
+
+    return deco
+
+
+def placements() -> List[str]:
+    return sorted(_PLACEMENTS)
+
+
+def _stable_hash(s: str) -> int:
+    # zlib.crc32 (not hash()): str hashing is salted per process, and
+    # placement must be reproducible across runs.
+    return zlib.crc32(s.encode("utf-8"))
+
+
+@register_placement("llm-affinity")
+def place_llm_affinity(job: Job, shards: Sequence[ClusterEngine]) -> int:
+    """All jobs of one LLM land on one shard: warm pools consolidate,
+    runtime reuse stays as effective as on a monolithic cluster."""
+    return _stable_hash(job.llm) % len(shards)
+
+
+@register_placement("least-loaded")
+def place_least_loaded(job: Job, shards: Sequence[ClusterEngine]) -> int:
+    """The shard with the least outstanding work at submit time:
+    jobs submitted but not yet finished (queued arrivals included —
+    placement happens before the event loop runs), normalized per
+    shard GPU."""
+    def load(e: ClusterEngine) -> float:
+        return e.outstanding_jobs / max(e.cfg.max_gpus, 1)
+
+    return min(range(len(shards)), key=lambda i: (load(shards[i]), i))
+
+
+@register_placement("hash")
+def place_hash(job: Job, shards: Sequence[ClusterEngine]) -> int:
+    """Uniform stable hash of (tenant, job id)."""
+    return _stable_hash(f"{job.tenant}/{job.job_id}") % len(shards)
+
+
+def _merge_results(per_shard: List[SimResult]) -> SimResult:
+    if len(per_shard) == 1:
+        return per_shard[0]
+    records = [r for res in per_shard for r in res.records]
+    records.sort(key=lambda r: (r.job.submit_time, r.job.job_id))
+    util: List = sorted(
+        (s for res in per_shard for s in res.util_samples),
+        key=lambda s: s[0])
+    cost_by_tenant: Dict[str, float] = {}
+    gpu_s_by_tenant: Dict[str, float] = {}
+    for res in per_shard:
+        for t, v in res.cost_by_tenant.items():
+            cost_by_tenant[t] = cost_by_tenant.get(t, 0.0) + v
+        for t, v in res.gpu_seconds_by_tenant.items():
+            gpu_s_by_tenant[t] = gpu_s_by_tenant.get(t, 0.0) + v
+    return SimResult(
+        records=records,
+        cost=sum(res.cost for res in per_shard),
+        gpu_seconds=sum(res.gpu_seconds for res in per_shard),
+        makespan=max(res.makespan for res in per_shard),
+        util_samples=util,
+        cost_by_tenant=cost_by_tenant,
+        gpu_seconds_by_tenant=gpu_s_by_tenant,
+    )
+
+
+class ClusterFabric:
+    """N engine shards behind one submit/run/stream surface.
+
+    ``cfg.max_gpus`` is the fleet total; it is split as evenly as
+    possible across shards (earlier shards absorb the remainder). With
+    ``shards=1`` the fabric is a transparent wrapper over a single
+    engine and reproduces its results exactly.
+    """
+
+    def __init__(
+        self,
+        cfg: Optional[SimConfig] = None,
+        policy: str = "prompttuner",
+        *,
+        shards: int = 1,
+        placement: str = "llm-affinity",
+    ):
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        cfg = cfg or SimConfig()
+        if cfg.max_gpus < shards:
+            raise ValueError(
+                f"cannot split {cfg.max_gpus} GPUs across {shards} shards")
+        if placement not in _PLACEMENTS:
+            raise KeyError(
+                f"unknown placement {placement!r}; available: {placements()}")
+        from repro.cluster.policies import get as get_policy
+
+        self.cfg = cfg
+        self.policy_name = policy
+        self.placement_name = placement
+        self._place = _PLACEMENTS[placement]
+        base, rem = divmod(cfg.max_gpus, shards)
+        self.shards: List[ClusterEngine] = []
+        for i in range(shards):
+            shard_cfg = (cfg if shards == 1 else
+                         replace(cfg, max_gpus=base + (1 if i < rem else 0)))
+            self.shards.append(
+                ClusterEngine(shard_cfg, get_policy(policy)(shard_cfg)))
+        self.placed: Dict[int, int] = {}      # job_id -> shard index
+
+    # -- streaming -----------------------------------------------------------
+
+    def on_event(self, cb: Callable[[EngineEvent], None]) -> None:
+        """Subscribe to the fabric-wide event stream (globally time-
+        ordered; each event's ``shard`` is the originating shard)."""
+        for i, eng in enumerate(self.shards):
+            eng.on_event(
+                lambda ev, _i=i: cb(replace(ev, shard=_i)))
+
+    # -- submit / run --------------------------------------------------------
+
+    def submit(self, job: Job) -> int:
+        """Place ``job`` on a shard and enqueue its arrival; returns the
+        shard index. Placement only considers shards large enough for
+        the job's replica unit — an uneven GPU split must not strand a
+        fleet-feasible job on a too-small shard. If no shard can ever
+        hold one replica the job is genuinely unschedulable and any
+        shard may record the violation."""
+        need = job.profile().gpus_per_replica
+        eligible = [i for i, e in enumerate(self.shards)
+                    if e.cfg.max_gpus >= need]
+        if eligible and len(eligible) < len(self.shards):
+            sub = [self.shards[i] for i in eligible]
+            i = eligible[self._place(job, sub)]
+        else:
+            i = self._place(job, self.shards)
+        self.placed[job.job_id] = i
+        self.shards[i].submit(job)
+        return i
+
+    def run(self, jobs: Sequence[Job] = ()) -> SimResult:
+        """Drive every shard until no work is outstanding, interleaving
+        shard event loops in global time order, and return the merged
+        fleet-wide :class:`SimResult`. Like ``ClusterEngine.run`` this
+        may be called repeatedly; state accumulates."""
+        for j in jobs:
+            self.submit(j)
+        for eng in self.shards:
+            eng.begin()
+        while True:
+            live = [(eng.next_event_time(), i)
+                    for i, eng in enumerate(self.shards) if eng.has_events()]
+            if not live:
+                break
+            _, i = min(live)
+            self.shards[i].step()
+        return _merge_results([eng.finish() for eng in self.shards])
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def now(self) -> float:
+        """The fabric clock: the furthest-advanced shard."""
+        return max(eng.now for eng in self.shards)
+
+    @property
+    def records(self):
+        return [r for eng in self.shards for r in eng.records]
+
+    def result(self) -> SimResult:
+        """Merged fleet-wide result so far (no draining side effects)."""
+        return _merge_results([eng.result() for eng in self.shards])
+
+    def summary(self) -> Dict[str, float]:
+        return self.result().summary()
+
+    def summary_by_tenant(self) -> Dict[str, Dict[str, float]]:
+        return self.result().summary_by_tenant()

@@ -22,6 +22,14 @@ from repro.cluster.engine import ResourceView, SimConfig
 from repro.core.jobs import Job, exec_time
 
 
+def admission_key(job: Job) -> Tuple[int, float]:
+    """SLO-class-aware admission order: higher-priority service classes
+    first, earliest deadline within a class. With a single class (all
+    priorities equal) Python's stable sort makes this identical to pure
+    EDF — which is what keeps the single-tenant goldens pinned."""
+    return (-job.slo_class.priority, job.deadline)
+
+
 def min_replicas_for_slo(job: Job, *, used_bank: bool, slo_rem: float,
                          max_rep: int, overhead: float) -> Tuple[int, bool]:
     """The admission loop shared by deadline-aware policies: the smallest

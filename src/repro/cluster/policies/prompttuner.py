@@ -3,8 +3,9 @@
 Two-tier GPU pools: a single shared *cold* pool (free until claimed) and
 per-LLM *warm* pools (pre-loaded runtime + weights; billed). Each round:
 
-  1. **Algorithm 1** (warm allocation): sort pending jobs by SLO
-     ascending; grow each job's allocation ``A_i`` until the predicted
+  1. **Algorithm 1** (warm allocation): sort pending jobs by service-
+     class priority, then SLO ascending (single-class traces reduce to
+     pure EDF); grow each job's allocation ``A_i`` until the predicted
      completion ``T_warm(A_i)`` fits the remaining SLO, then claim idle
      warm GPUs and start.
   2. **Algorithm 2** (cold allocation): for jobs Algorithm 1 could not
@@ -31,6 +32,7 @@ from typing import Dict, List
 from repro.cluster.engine import ResourceView
 from repro.cluster.policies.base import (
     SchedulingPolicy,
+    admission_key,
     min_replicas_for_slo,
     register,
 )
@@ -68,7 +70,7 @@ class PromptTunerPolicy(SchedulingPolicy):
                 continue
             pool = view.pool(llm)
             prof = queue[0].profile()
-            queue.sort(key=lambda j: j.deadline)
+            queue.sort(key=admission_key)
             leftover: List[Job] = []
             for job in queue:
                 used_bank = view.use_bank_for(job)
@@ -127,7 +129,7 @@ class PromptTunerPolicy(SchedulingPolicy):
         """Grow warm pools from the cold pool for jobs that cannot be
         delayed (SLO-ascending)."""
         timelines: Dict[str, List[float]] = {}
-        unsatisfied.sort(key=lambda j: j.deadline)
+        unsatisfied.sort(key=admission_key)
         for job in unsatisfied:
             llm = job.llm
             prof = job.profile()
@@ -165,7 +167,7 @@ class PromptTunerPolicy(SchedulingPolicy):
             pool = view.pool(llm)
             prof = queue[0].profile()
             leftover: List[Job] = []
-            for job in sorted(queue, key=lambda j: j.deadline):
+            for job in sorted(queue, key=admission_key):
                 g = prof.gpus_per_replica
                 # run hopeless jobs on idle warm GPUs (lowest priority)
                 hopeless = (self._t_warm(job, self.cfg.max_replicas_per_job,
@@ -201,7 +203,7 @@ class PromptTunerPolicy(SchedulingPolicy):
             if not queue:
                 continue
             prof = queue[0].profile()
-            queue.sort(key=lambda j: j.deadline)
+            queue.sort(key=admission_key)
             leftover: List[Job] = []
             for job in queue:
                 used_bank = view.use_bank_for(job)

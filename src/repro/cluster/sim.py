@@ -12,7 +12,6 @@ from repro.cluster.engine import (
     ARRIVAL,
     JOB_DONE,
     ROUND,
-    WARM_READY,
     ClusterEngine,
     ClusterSim,
     JobRecord,

@@ -22,11 +22,19 @@ from __future__ import annotations
 import json
 import os
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.jobs import LLM_PROFILES, Job, iter_time
+from repro.core.jobs import (
+    DEFAULT_SLO_CLASS,
+    DEFAULT_TENANT,
+    LLM_PROFILES,
+    SLO_CLASSES,
+    Job,
+    SLOClass,
+    iter_time,
+)
 
 TRACE_MINUTES = 20
 LOADS: Dict[str, Dict[str, int]] = {
@@ -89,6 +97,8 @@ class TraceConfig:
     duration_hi: float = 300.0
     scale: float = 1.0                # multiply request counts (scalability eval)
     llms: Optional[Sequence[str]] = None
+    tenant: str = DEFAULT_TENANT      # stamp every job with this tenant
+    slo_class: SLOClass = DEFAULT_SLO_CLASS  # ... and this service class
 
 
 def arrival_times(
@@ -142,8 +152,10 @@ def generate_trace(cfg: TraceConfig) -> List[Job]:
             ind_spec = cal["induction_over_bank"].get(
                 llm, {"lo": 1.3, "hi": 2.0})
             iters_induction = max(int(iters_bank * _rng_range(rng, ind_spec)), 2)
-            # SLO = trace duration x S + one allocation overhead (§6.1)
-            slo = dur * cfg.slo_emergence + prof.cold_overhead
+            # SLO = trace duration x S + one allocation overhead (§6.1),
+            # scaled by the service class's stringency (standard = 1.0)
+            slo = (dur * cfg.slo_emergence + prof.cold_overhead) \
+                * cfg.slo_class.slo_multiplier
             job = Job(
                 job_id=jid,
                 llm=llm,
@@ -152,12 +164,67 @@ def generate_trace(cfg: TraceConfig) -> List[Job]:
                 iters_manual=iters_manual,
                 iters_bank=iters_bank,
                 task_id=f"task{jid % 120}",
+                tenant=cfg.tenant,
+                slo_class=cfg.slo_class,
             )
             job.iters_ideal = iters_ideal            # extra attrs for ablations
             job.iters_induction = iters_induction
             jobs.append(job)
             jid += 1
     jobs.sort(key=lambda j: j.submit_time)
+    for i, j in enumerate(jobs):
+        j.job_id = i
+    return jobs
+
+
+@dataclass
+class TenantSpec:
+    """One tenant's slice of a multi-tenant trace: its load/SLO profile
+    plus the service class it bought. ``slo_class`` accepts a catalogue
+    name (``premium`` / ``standard`` / ``best-effort``) or an ad-hoc
+    :class:`~repro.core.jobs.SLOClass`."""
+
+    name: str
+    load: str = "medium"              # low | medium | high, or heavy model
+    slo_class: Union[str, SLOClass] = "standard"  # SLO_CLASSES key or ad-hoc
+    scale: float = 1.0                # per-tenant load multiplier
+    slo_emergence: float = 1.0        # per-tenant S (SLO stringency)
+
+    def resolved_class(self) -> SLOClass:
+        if isinstance(self.slo_class, SLOClass):
+            return self.slo_class
+        return SLO_CLASSES[self.slo_class]
+
+
+DEFAULT_TENANT_MIX = (
+    TenantSpec("acme", load="medium", slo_class="premium", scale=0.5),
+    TenantSpec("globex", load="medium", slo_class="standard"),
+    TenantSpec("initech", load="high", slo_class="best-effort", scale=0.7),
+)
+
+
+def generate_tenant_mix(
+    tenants: Sequence[TenantSpec] = DEFAULT_TENANT_MIX,
+    *,
+    minutes: int = TRACE_MINUTES,
+    seed: int = 0,
+) -> List[Job]:
+    """A multi-tenant workload: each tenant's sub-trace is generated with
+    its own load / scale / stringency (decorrelated seeds), stamped with
+    the tenant's identity and service class, and the union is merged in
+    arrival order with globally unique job ids."""
+    jobs: List[Job] = []
+    for k, spec in enumerate(tenants):
+        cls = spec.resolved_class()
+        sub = generate_trace(TraceConfig(
+            load=spec.load, slo_emergence=spec.slo_emergence,
+            minutes=minutes, seed=seed + 7919 * (k + 1), scale=spec.scale,
+            tenant=spec.name, slo_class=cls,
+        ))
+        for j in sub:
+            j.task_id = f"{spec.name}/{j.task_id}"
+        jobs.extend(sub)
+    jobs.sort(key=lambda j: (j.submit_time, j.tenant))
     for i, j in enumerate(jobs):
         j.job_id = i
     return jobs
@@ -171,7 +238,7 @@ def clone_jobs(jobs: List[Job]) -> List[Job]:
         c = Job(job_id=j.job_id, llm=j.llm, submit_time=j.submit_time,
                 slo=j.slo, iters_manual=j.iters_manual,
                 iters_bank=j.iters_bank, max_iters=j.max_iters,
-                task_id=j.task_id)
+                task_id=j.task_id, tenant=j.tenant, slo_class=j.slo_class)
         for extra in ("iters_ideal", "iters_induction"):
             if hasattr(j, extra):
                 setattr(c, extra, getattr(j, extra))

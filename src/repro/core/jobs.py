@@ -52,6 +52,40 @@ class JobPhase(Enum):
     DONE = "done"
 
 
+@dataclass(frozen=True)
+class SLOClass:
+    """A tenant-facing service class: how stringent the SLO is, what the
+    tenant pays for it, and how the scheduler breaks admission ties.
+
+    ``slo_multiplier`` scales the raw per-request SLO a tenant states
+    (premium classes buy tighter deadlines than the trace's nominal
+    duration-based SLO, best-effort classes relax them). ``price_tier``
+    multiplies the base GPU price in the per-tenant ledger. ``priority``
+    orders admission *between* classes (higher first); within a class
+    the scheduler keeps its deadline order.
+    """
+
+    name: str = "standard"
+    slo_multiplier: float = 1.0
+    price_tier: float = 1.0
+    priority: int = 0
+
+
+DEFAULT_SLO_CLASS = SLOClass()
+
+# A small catalogue of the classes the multi-tenant traces and
+# benchmarks draw from; anything can construct ad-hoc classes too.
+SLO_CLASSES: Dict[str, SLOClass] = {
+    "premium": SLOClass("premium", slo_multiplier=0.75, price_tier=2.0,
+                        priority=2),
+    "standard": DEFAULT_SLO_CLASS,
+    "best-effort": SLOClass("best-effort", slo_multiplier=1.5,
+                            price_tier=0.5, priority=-1),
+}
+
+DEFAULT_TENANT = "default"
+
+
 @dataclass
 class Job:
     """One LPT request (Table 3)."""
@@ -63,6 +97,8 @@ class Job:
     iters_bank: int                # ITA with the Prompt Bank's initial prompt
     max_iters: int = 10_000
     task_id: str = ""
+    tenant: str = DEFAULT_TENANT
+    slo_class: SLOClass = DEFAULT_SLO_CLASS
     # runtime state
     phase: JobPhase = JobPhase.PENDING
     start_time: Optional[float] = None

@@ -139,6 +139,75 @@ def test_service_is_policy_agnostic():
         assert len(res) == 1 and res[0].completed, name
 
 
+def test_service_over_sharded_fabric_with_tenants():
+    """The service front door over a 2-shard fabric: tenant + SLO class
+    on the handle, per-tenant summaries, and streaming callbacks."""
+    from repro.api import ClusterFabric, EngineEvent
+
+    fabric = ClusterFabric(SimConfig(max_gpus=16), "prompttuner", shards=2)
+    svc = PromptTunerService(fabric=fabric)
+    events = []
+    svc.stream(events.append)
+    handles = []
+    for i, (tenant, cls) in enumerate([("acme", "premium"),
+                                       ("globex", "standard"),
+                                       ("initech", "best-effort")]):
+        handles.append(svc.submit(SubmitRequest(
+            task_id=f"t{i}", llm="gpt2-base", slo=400.0,
+            iters_manual=200, iters_bank=60, submit_time=float(i),
+            tenant=tenant, slo_class=cls)))
+    h = handles[0]
+    assert h.tenant == "acme" and h.slo_class == "premium"
+    assert h.effective_slo == pytest.approx(400.0 * 0.75)
+    assert h.shard in (0, 1)
+    results = svc.run_until_idle()
+    assert len(results) == 3 and all(r.completed for r in results)
+    assert all(isinstance(e, EngineEvent) for e in events)
+    done = [e for e in events if e.kind == "job_done"]
+    assert len(done) == 3
+    by_tenant = svc.summary_by_tenant()
+    for tenant in ("acme", "globex", "initech"):
+        assert by_tenant[tenant]["jobs"] == 1
+    # premium pays 2x the standard tier per GPU-second
+    assert (by_tenant["acme"]["cost_usd"] / by_tenant["acme"]["gpu_seconds"]
+            > by_tenant["globex"]["cost_usd"]
+            / by_tenant["globex"]["gpu_seconds"])
+
+
+def test_slo_class_multiplier_affects_routing():
+    """Premium tightens the effective SLO, which can push the bank
+    lookup out of the §4.4.3 latency budget."""
+    svc = PromptTunerService(SimConfig(max_gpus=8))
+    prof = LLM_PROFILES["gpt2-base"]
+    # just inside the budget at standard stringency, outside at premium
+    slo = prof.bank_lookup_s / svc.cfg.latency_budget_frac + 1.0
+    std = svc.submit(SubmitRequest(task_id="s", llm="gpt2-base", slo=slo,
+                                   iters_manual=200, iters_bank=60))
+    prem = svc.submit(SubmitRequest(task_id="p", llm="gpt2-base", slo=slo,
+                                    iters_manual=200, iters_bank=60,
+                                    slo_class="premium"))
+    assert std.routed_through_bank is True
+    assert prem.routed_through_bank is False
+    with pytest.raises(KeyError, match="unknown SLO class"):
+        svc.submit(SubmitRequest(task_id="x", llm="gpt2-base", slo=slo,
+                                 iters_manual=200, iters_bank=60,
+                                 slo_class="platinum"))
+
+
+def test_summary_preserves_util_samples():
+    """The service's SimResult re-wrap must not drop engine state:
+    util_samples (and the tenant ledgers) survive."""
+    svc = PromptTunerService(SimConfig(max_gpus=8))
+    svc.submit(_req("a", slo=400.0))
+    svc.run_until_idle()
+    res = svc.sim_result()
+    assert len(res.util_samples) > 0
+    assert res.util_samples == svc.engine.util_samples
+    assert max(g for _, g in res.util_samples) >= 1   # the job actually ran
+    assert svc.summary()["jobs"] == 1
+    assert "default" in res.gpu_seconds_by_tenant
+
+
 def test_no_insert_without_tuned_prompt_payload():
     """Requests without a tuned-prompt payload must not mutate the bank
     (lookup still runs off the request feature)."""

@@ -11,6 +11,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [
     ("seamless-m4t-medium", "decode_32k"),
     ("qwen2-7b", "long_500k"),
@@ -20,7 +21,10 @@ def test_dryrun_subprocess(arch, shape, tmp_path):
     and emit a complete record (own process: it forces 512 devices)."""
     out = os.path.join(tmp_path, "rec.jsonl")
     env = dict(ENV)
-    env.pop("JAX_PLATFORMS", None)
+    # force the CPU platform (the 512 forced host devices live there):
+    # leaving platform autodetection on makes jax probe for a TPU PJRT
+    # plugin, whose GCP-metadata fetch can stall for minutes in CI
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
          "--shape", shape, "--mesh", "single", "--out", out],

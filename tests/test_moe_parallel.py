@@ -55,7 +55,11 @@ print("OK")
 
 def test_expert_parallel_matches_dense():
     env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
-    env.pop("JAX_PLATFORMS", None)
+    # force the CPU platform: without it jax probes for a TPU PJRT
+    # plugin, whose GCP-metadata fetch can stall for minutes in
+    # sandboxed CI; --xla_force_host_platform_device_count only acts on
+    # the host (CPU) platform anyway
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", SCRIPT], cwd=ROOT, env=env,
                        capture_output=True, text=True, timeout=300)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]

@@ -214,6 +214,43 @@ def test_view_warm_accounting_conserved():
     assert pool.total() == 0
 
 
+def _pool_snapshot(eng, llm):
+    p = eng.view.pool(llm)
+    return (eng.cold_free, list(p.idle), list(p.warming), p.busy)
+
+
+def test_warm_up_overdraw_raises_and_leaves_accounting_unchanged():
+    eng = ClusterEngine(SimConfig(max_gpus=4))
+    eng.view.warm_up("gpt2-base", 2, ready_in=1.0)
+    before = _pool_snapshot(eng, "gpt2-base")
+    with pytest.raises(ValueError, match="warm_up"):
+        eng.view.warm_up("gpt2-base", 3, ready_in=1.0)
+    assert _pool_snapshot(eng, "gpt2-base") == before
+
+
+def test_claim_cold_busy_overdraw_raises_and_leaves_accounting_unchanged():
+    eng = ClusterEngine(SimConfig(max_gpus=4))
+    eng.view.claim_cold_busy("gpt2-base", 3)
+    before = _pool_snapshot(eng, "gpt2-base")
+    with pytest.raises(ValueError, match="claim_cold_busy"):
+        eng.view.claim_cold_busy("gpt2-base", 2)
+    assert _pool_snapshot(eng, "gpt2-base") == before
+
+
+def test_return_cold_overdraw_raises_and_leaves_accounting_unchanged():
+    eng = ClusterEngine(SimConfig(max_gpus=4))
+    eng.view.claim_cold_busy("gpt2-base", 2)
+    before = _pool_snapshot(eng, "gpt2-base")
+    with pytest.raises(ValueError, match="return_cold"):
+        eng.view.return_cold("gpt2-base", 3)
+    assert _pool_snapshot(eng, "gpt2-base") == before
+    # a second LLM's pool has zero busy GPUs: any return overdraws
+    with pytest.raises(ValueError, match="return_cold"):
+        eng.view.return_cold("vicuna-7b", 1)
+    assert _pool_snapshot(eng, "gpt2-base") == before
+    assert eng.view.pool("vicuna-7b").total() == 0
+
+
 def test_warmpool_take_release_roundtrip():
     p = WarmPool()
     p.idle = [0.0, 1.0, 2.0]
