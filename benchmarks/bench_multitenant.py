@@ -1,50 +1,86 @@
-"""Multi-tenant fabric benchmark: per-tenant SLO violation and billed
-cost under a 3-tenant mixed trace (premium / standard / best-effort
-classes), swept across shard counts and placement strategies.
+"""Multi-tenant fabric benchmark: the elastic control plane head-to-head.
 
-What it shows:
+Sweeps {shard count x placement x elastic on/off} over the bursty
+3-tenant mix (``BURSTY_TENANT_MIX``: premium / standard / best-effort
+classes, spiky imbalanced arrivals) and records, per point: SLO
+violation rate, billed cost, makespan, and wall-clock. Two elastic
+variants run at each shard count:
 
-* class differentiation — the priority-aware admission order should buy
-  the premium tenant a lower violation rate than best-effort at equal
-  fleet size;
-* sharding cost — fragmenting one fleet into N isolated shards trades
-  consolidation (runtime reuse, statistical multiplexing) for isolation;
-  ``llm-affinity`` placement recovers most of the reuse, ``hash`` loses
-  it.
+* ``elastic`` — the full control plane (work stealing + queue-pressure
+  autoscaling + per-tenant quotas, here a cost cap on the best-effort
+  tenant). This is the paper's headline configuration: SLO-aware
+  elasticity plus admission control.
+* ``elastic-noquota`` — stealing + autoscaling only, same workload
+  admitted as the static runs (pure placement-vs-elastic comparison).
+
+The verdict (recorded in ``BENCH_multitenant.json`` at the repo root):
+at the largest shard count the full elastic control plane must show a
+lower SLO violation rate AND a lower billed cost than every static
+placement. ``benchmarks/check_regression.py`` diffs fresh runs against
+the committed baseline.
 """
 from __future__ import annotations
 
-from typing import Dict
+import json
+import os
+import time
+from typing import Dict, Optional
 
 from benchmarks.common import fmt, save_result, table
 from repro.cluster import (
+    BURSTY_TENANT_MIX,
     ClusterFabric,
-    DEFAULT_TENANT_MIX,
-    SHARED_POOL,
+    ElasticConfig,
     SimConfig,
+    TenantQuota,
     clone_jobs,
     generate_tenant_mix,
 )
 
-TENANTS = DEFAULT_TENANT_MIX
-
-SHARD_COUNTS = (1, 2, 4)
+TENANTS = BURSTY_TENANT_MIX
+SHARD_COUNTS = (1, 2, 4, 8)
 PLACEMENTS = ("llm-affinity", "least-loaded", "hash")
+GPUS = 32
+# The full control plane caps the best-effort hog's billed spend; its
+# overload is shed at admission instead of burning fleet on jobs that
+# would violate anyway.
+BEST_EFFORT_CAP_USD = 10.0
+
+ROOT_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "BENCH_multitenant.json")
 
 
-def run_point(shards: int, placement: str, *, gpus: int, minutes: int,
-              seeds: int, policy: str = "prompttuner") -> Dict[str, Dict]:
+def elastic_config(quota: bool) -> ElasticConfig:
+    quotas = ({"initech": TenantQuota(cost_usd=BEST_EFFORT_CAP_USD)}
+              if quota else {})
+    return ElasticConfig(quotas=quotas)
+
+
+def run_point(shards: int, placement: str, elastic: Optional[ElasticConfig],
+              *, minutes: int, seeds: int,
+              policy: str = "prompttuner") -> Dict[str, Dict]:
     acc: Dict[str, Dict[str, float]] = {}
-    total: Dict[str, float] = {"slo_violation_pct": 0.0, "cost_usd": 0.0,
-                               "gpu_seconds": 0.0}
+    total: Dict[str, float] = {
+        "slo_violation_pct": 0.0, "cost_usd": 0.0, "gpu_seconds": 0.0,
+        "makespan_s": 0.0, "jobs": 0.0, "rejections": 0.0,
+        "steals": 0.0, "resizes": 0.0, "wall_clock_s": 0.0,
+    }
     for sd in range(seeds):
         mix = generate_tenant_mix(TENANTS, minutes=minutes, seed=sd)
-        fab = ClusterFabric(SimConfig(max_gpus=gpus), policy,
-                            shards=shards, placement=placement)
+        fab = ClusterFabric(SimConfig(max_gpus=GPUS), policy,
+                            shards=shards, placement=placement,
+                            elastic=elastic)
+        t0 = time.perf_counter()
         res = fab.run(clone_jobs(mix))
+        total["wall_clock_s"] += (time.perf_counter() - t0) / seeds
         s = res.summary()
-        for k in total:
+        for k in ("slo_violation_pct", "cost_usd", "gpu_seconds",
+                  "makespan_s", "jobs"):
             total[k] += s.get(k, 0.0) / seeds
+        total["rejections"] += len(fab.rejections) / seeds
+        if fab.controller is not None:
+            total["steals"] += fab.controller.steals / seeds
+            total["resizes"] += fab.controller.resizes / seeds
         for tenant, row in res.summary_by_tenant().items():
             slot = acc.setdefault(tenant, {
                 "slo_violation_pct": 0.0, "cost_usd": 0.0,
@@ -55,42 +91,91 @@ def run_point(shards: int, placement: str, *, gpus: int, minutes: int,
 
 
 def run(quick: bool = False) -> Dict:
-    minutes = 5 if quick else 20
-    seeds = 1 if quick else 3
-    gpus = 32
+    minutes = 10 if quick else 20
+    seeds = 1 if quick else 2
+    shard_counts = (1, 2, 8) if quick else SHARD_COUNTS
     out: Dict[str, Dict] = {
-        "tenants": {t.name: {"load": t.load, "scale": t.scale,
-                             "slo_class": str(t.slo_class)}
-                    for t in TENANTS},
+        "config": {
+            "gpus": GPUS, "minutes": minutes, "seeds": seeds,
+            "best_effort_cap_usd": BEST_EFFORT_CAP_USD,
+            "tenants": {t.name: {"load": t.load, "scale": t.scale,
+                                 "slo_class": str(t.slo_class),
+                                 "spike_prob": t.spike_prob,
+                                 "spike_mult": t.spike_mult}
+                        for t in TENANTS},
+        },
         "points": {},
     }
     rows = []
-    for shards in SHARD_COUNTS:
-        for placement in PLACEMENTS:
-            if shards == 1 and placement != PLACEMENTS[0]:
-                continue               # placement is moot with one shard
-            point = run_point(shards, placement, gpus=gpus,
+    for shards in shard_counts:
+        variants = [(p, None, "static") for p in PLACEMENTS
+                    if not (shards == 1 and p != PLACEMENTS[0])]
+        # elastic always rides on llm-affinity placement (warmth is what
+        # stealing exploits); at shards=1 the controller is a no-op and
+        # the row doubles as the golden-equivalence check
+        variants.append((PLACEMENTS[0], elastic_config(quota=False),
+                         "elastic-noquota"))
+        variants.append((PLACEMENTS[0], elastic_config(quota=True),
+                         "elastic"))
+        for placement, ecfg, mode in variants:
+            point = run_point(shards, placement, ecfg,
                               minutes=minutes, seeds=seeds)
-            out["points"][f"shards{shards}/{placement}"] = point
+            out["points"][f"shards{shards}/{placement}/{mode}"] = point
+            t = point["total"]
             bt = point["by_tenant"]
             rows.append([
-                shards, placement,
+                shards, placement, mode,
+                fmt(t["slo_violation_pct"], 1),
+                fmt(t["cost_usd"]),
+                fmt(t["makespan_s"], 0),
+                fmt(t["wall_clock_s"], 1),
+                int(round(t["rejections"])),
+                int(round(t["steals"])),
                 fmt(bt.get("acme", {}).get("slo_violation_pct", 0.0), 1),
-                fmt(bt.get("globex", {}).get("slo_violation_pct", 0.0), 1),
                 fmt(bt.get("initech", {}).get("slo_violation_pct", 0.0), 1),
-                # tenant revenue only: the (shared-pool) row is idle
-                # capacity attributable to no tenant
-                fmt(sum(v["cost_usd"] for t, v in bt.items()
-                        if t != SHARED_POOL)),
-                fmt(point["total"]["cost_usd"]),
             ])
     print(table(
-        "Multi-tenant fabric — per-tenant SLO violation (%) and billing",
-        ["shards", "placement", "acme(prem)", "globex(std)",
-         "initech(be)", "billed $", "fleet $"], rows))
+        "Bursty 3-tenant mix - static placements vs elastic control plane",
+        ["shards", "placement", "mode", "viol %", "cost $", "mkspan",
+         "wall s", "rej", "steals", "prem %", "be %"], rows))
+
+    # -- head-to-head verdict at the largest shard count -----------------------
+    top = max(shard_counts)
+    statics = {p: out["points"][f"shards{top}/{p}/static"]["total"]
+               for p in PLACEMENTS}
+    el = out["points"][f"shards{top}/{PLACEMENTS[0]}/elastic"]["total"]
+    beats = all(el["slo_violation_pct"] < s["slo_violation_pct"]
+                and el["cost_usd"] < s["cost_usd"]
+                for s in statics.values())
+    out["verdict"] = {
+        "at_shards": top,
+        "elastic": {k: el[k] for k in ("slo_violation_pct", "cost_usd")},
+        "statics": {p: {k: s[k] for k in ("slo_violation_pct", "cost_usd")}
+                    for p, s in statics.items()},
+        "elastic_beats_every_static": beats,
+    }
+    word = ("elastic beats every static placement" if beats
+            else "ELASTIC DOES NOT DOMINATE")
+    print(f"\nverdict @ {top} shards: elastic "
+          f"{el['slo_violation_pct']:.1f}% / ${el['cost_usd']:.2f} vs "
+          + ", ".join(f"{p} {s['slo_violation_pct']:.1f}%/"
+                      f"${s['cost_usd']:.2f}" for p, s in statics.items())
+          + f" -> {word}")
+
     save_result("multitenant", out)
+    # The repo-root copy is the committed baseline check_regression
+    # diffs against — refresh it only on request so ordinary runs
+    # (and CI) never clobber the file they are being compared to.
+    if os.environ.get("WRITE_BENCH_BASELINE"):
+        with open(ROOT_JSON, "w") as f:
+            json.dump(out, f, indent=1, default=float)
+        print(f"wrote baseline {os.path.abspath(ROOT_JSON)}")
+    else:
+        print("baseline untouched (set WRITE_BENCH_BASELINE=1 to refresh "
+              f"{os.path.abspath(ROOT_JSON)})")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(quick="--quick" in sys.argv)

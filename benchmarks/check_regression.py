@@ -1,0 +1,94 @@
+"""Diff a fresh BENCH_*.json against the committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--baseline BENCH_multitenant.json] [--fresh artifacts/bench/multitenant.json] \
+        [--threshold 0.10]
+
+Compares every shared sweep point on SLO violation rate and billed
+cost; a point regresses when the fresh value exceeds the baseline by
+more than ``threshold`` (relative, with a small absolute floor so near-
+zero baselines don't flag on noise). Exits non-zero when regressions
+are found — CI runs this as a non-blocking job, so a red diff flags the
+PR without failing the build.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+METRICS = ("slo_violation_pct", "cost_usd")
+ABS_FLOOR = {"slo_violation_pct": 1.0, "cost_usd": 1.0}
+
+
+def _points(doc: Dict) -> Dict[str, Dict[str, float]]:
+    return {name: p.get("total", {}) for name, p in
+            doc.get("points", {}).items()}
+
+
+def compare(baseline: Dict, fresh: Dict,
+            threshold: float) -> List[Tuple[str, str, float, float]]:
+    """Returns (point, metric, base, new) for every regression."""
+    base_pts = _points(baseline)
+    fresh_pts = _points(fresh)
+    regressions = []
+    for name in sorted(set(base_pts) & set(fresh_pts)):
+        for metric in METRICS:
+            b = base_pts[name].get(metric)
+            f = fresh_pts[name].get(metric)
+            if b is None or f is None:
+                continue
+            if f > b * (1.0 + threshold) + ABS_FLOOR[metric] * threshold:
+                regressions.append((name, metric, b, f))
+    return regressions
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_multitenant.json")
+    ap.add_argument("--fresh",
+                    default=os.path.join("artifacts", "bench",
+                                         "multitenant.json"))
+    ap.add_argument("--threshold", type=float, default=0.10)
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"no committed baseline at {args.baseline}; nothing to diff")
+        return 0
+    if not os.path.exists(args.fresh):
+        print(f"no fresh result at {args.fresh}; run the benchmark first")
+        return 0
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    base_cfg = baseline.get("config", {})
+    fresh_cfg = fresh.get("config", {})
+    comparable = all(base_cfg.get(k) == fresh_cfg.get(k)
+                     for k in ("gpus", "minutes", "seeds"))
+    if not comparable:
+        print("baseline and fresh runs use different sweep configs "
+              f"(baseline {base_cfg.get('gpus')}g/{base_cfg.get('minutes')}m/"
+              f"{base_cfg.get('seeds')}s vs fresh {fresh_cfg.get('gpus')}g/"
+              f"{fresh_cfg.get('minutes')}m/{fresh_cfg.get('seeds')}s); "
+              "skipping the diff")
+        return 0
+
+    regressions = compare(baseline, fresh, args.threshold)
+    shared = len(set(_points(baseline)) & set(_points(fresh)))
+    if not regressions:
+        print(f"OK: no >{args.threshold:.0%} regressions across "
+              f"{shared} shared points ({', '.join(METRICS)})")
+        return 0
+    print(f"REGRESSIONS (> {args.threshold:.0%} over baseline):")
+    for name, metric, b, f in regressions:
+        print(f"  {name}: {metric} {b:.2f} -> {f:.2f} "
+              f"(+{(f - b) / max(b, 1e-9):.0%})")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

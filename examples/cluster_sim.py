@@ -3,6 +3,8 @@ every registered scheduling policy; report SLO violations + cost.
 
     PYTHONPATH=src python examples/cluster_sim.py [--load medium] [--S 1.0]
     PYTHONPATH=src python examples/cluster_sim.py --tenants --shards 4
+    PYTHONPATH=src python examples/cluster_sim.py --bursty --shards 8 \
+        --elastic --cap-best-effort 10 --policies prompttuner
 
 Policies come from the string-keyed registry — adding a new system is
 one class in ``repro/cluster/policies/`` and it shows up here for free.
@@ -18,9 +20,12 @@ from dataclasses import replace
 sys.path.insert(0, "src")
 
 from repro.cluster import (
+    BURSTY_TENANT_MIX,
     ClusterFabric,
     DEFAULT_TENANT_MIX,
+    ElasticConfig,
     SimConfig,
+    TenantQuota,
     TraceConfig,
     clone_jobs,
     generate_tenant_mix,
@@ -45,15 +50,31 @@ def main():
                     choices=placements())
     ap.add_argument("--tenants", action="store_true",
                     help="3-tenant premium/standard/best-effort mix")
+    ap.add_argument("--bursty", action="store_true",
+                    help="spiky imbalanced tenant mix (implies --tenants)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="attach the elastic control plane (work stealing "
+                         "+ autoscaling; needs --shards >= 2 to act)")
+    ap.add_argument("--cap-best-effort", type=float, default=None,
+                    metavar="USD",
+                    help="with --elastic: per-tenant cost cap on the "
+                         "best-effort tenant (admission control)")
     ap.add_argument("--policies", nargs="*", default=policies.available(),
                     help=f"subset of {policies.available()}")
     args = ap.parse_args()
 
-    if args.tenants:
+    elastic = None
+    if args.elastic:
+        quotas = ({"initech": TenantQuota(cost_usd=args.cap_best_effort)}
+                  if args.cap_best_effort is not None else {})
+        elastic = ElasticConfig(quotas=quotas)
+    if args.tenants or args.bursty:
         # per-tenant loads come from the mix spec; --S still applies
-        mix = [replace(t, slo_emergence=args.S) for t in DEFAULT_TENANT_MIX]
+        base_mix = BURSTY_TENANT_MIX if args.bursty else DEFAULT_TENANT_MIX
+        mix = [replace(t, slo_emergence=args.S) for t in base_mix]
         jobs = generate_tenant_mix(mix, seed=args.seed)
-        desc = (f"3-tenant mix (per-tenant loads: "
+        kind = "bursty " if args.bursty else ""
+        desc = (f"{kind}3-tenant mix (per-tenant loads: "
                 f"{', '.join(f'{t.name}={t.load}x{t.scale}' for t in mix)}"
                 f", S={args.S}; --load ignored)")
     else:
@@ -68,12 +89,18 @@ def main():
           f"{'GPU-hours':>10s}")
     for name in args.policies:
         fab = ClusterFabric(SimConfig(max_gpus=args.gpus), name,
-                            shards=args.shards, placement=args.placement)
+                            shards=args.shards, placement=args.placement,
+                            elastic=elastic)
         res = fab.run(clone_jobs(jobs))
         s = res.summary()
+        extra = ""
+        if fab.controller is not None:
+            extra = (f"   steals={fab.controller.steals} "
+                     f"resizes={fab.controller.resizes} "
+                     f"rejected={len(fab.rejections)}")
         print(f"{name:14s} {s['slo_violation_pct']:10.1f} "
-              f"{s['cost_usd']:8.2f} {s['gpu_seconds'] / 3600:10.1f}")
-        if args.tenants and name == "prompttuner":
+              f"{s['cost_usd']:8.2f} {s['gpu_seconds'] / 3600:10.1f}{extra}")
+        if (args.tenants or args.bursty) and name == "prompttuner":
             for tenant, row in res.summary_by_tenant().items():
                 print(f"  · {tenant:12s} {row['slo_violation_pct']:10.1f} "
                       f"{row['cost_usd']:8.2f} "

@@ -47,6 +47,7 @@ from repro.cluster.engine import (
     SimResult,
     bank_fits_budget,
 )
+from repro.cluster.elastic import ElasticConfig, TenantQuota
 from repro.cluster.fabric import ClusterFabric
 from repro.core.jobs import (
     DEFAULT_SLO_CLASS,
@@ -80,16 +81,17 @@ class PromptTunerService:
         fabric: Optional[ClusterFabric] = None,
         shards: Optional[int] = None,
         placement: Optional[str] = None,
+        elastic: Optional[ElasticConfig] = None,
     ):
         if fabric is not None:
             conflicting = [name for name, given in [
                 ("cfg", cfg), ("policy", policy), ("shards", shards),
-                ("placement", placement),
+                ("placement", placement), ("elastic", elastic),
             ] if given is not None]
             if conflicting:
                 raise ValueError(
                     f"pass either fabric= or {conflicting} — a pre-built "
-                    "fabric already fixes cfg/policy/shards/placement")
+                    "fabric already fixes cfg/policy/shards/placement/elastic")
             self.fabric = fabric
             self.cfg = fabric.cfg
             self.policy_name = fabric.policy_name
@@ -98,7 +100,7 @@ class PromptTunerService:
             self.policy_name = policy or "prompttuner"
             self.fabric = ClusterFabric(
                 self.cfg, self.policy_name, shards=shards or 1,
-                placement=placement or "llm-affinity")
+                placement=placement or "llm-affinity", elastic=elastic)
         self.bank = bank
         self.score_fn_factory = score_fn_factory
         self._handles: Dict[int, JobHandle] = {}
@@ -173,6 +175,8 @@ class PromptTunerService:
             slo_class=cls,
         )
         shard = self.fabric.submit(job)
+        rejected = shard < 0
+        reason = self.fabric.rejections[-1][1] if rejected else None
         handle = JobHandle(
             job_id=job_id,
             task_id=req.task_id,
@@ -186,10 +190,23 @@ class PromptTunerService:
             bank_origin=origin,
             bank_score=score,
             initial_prompt=init_prompt,
+            rejected=rejected,
+            reject_reason=reason,
         )
-        self._handles[job_id] = handle
-        self._requests[job_id] = req
+        if not rejected:
+            self._handles[job_id] = handle
+            self._requests[job_id] = req
         return handle
+
+    def set_quota(self, tenant: str, quota: TenantQuota) -> None:
+        """Attach/replace a tenant's admission quota. Requires an
+        elastic fabric (``elastic=ElasticConfig(...)`` or a pre-built
+        fabric with a controller)."""
+        if self.fabric.controller is None:
+            raise ValueError(
+                "quotas need an elastic fabric: pass elastic=ElasticConfig() "
+                "(or a fabric built with one)")
+        self.fabric.controller.set_quota(tenant, quota)
 
     def run_until_idle(self) -> List[JobResult]:
         """Drive every fabric shard until no submitted work is

@@ -47,7 +47,13 @@ class SubmitRequest:
 
 @dataclass(frozen=True)
 class JobHandle:
-    """Returned by ``submit``: identity plus the routing decision."""
+    """Returned by ``submit``: identity plus the routing decision.
+
+    A submission bounced off a tenant quota comes back with
+    ``rejected=True`` (and ``shard=-1``): the job was never placed,
+    never runs, and never bills; ``reject_reason`` carries the quota
+    dimension that tripped (GPU-second budget / cost cap / outstanding
+    cap)."""
 
     job_id: int
     task_id: str
@@ -61,6 +67,8 @@ class JobHandle:
     bank_origin: Optional[str] = None  # origin of the looked-up initial prompt
     bank_score: Optional[float] = None # its Eqn-1 score
     initial_prompt: Optional[np.ndarray] = None  # the prompt itself, for tuning
+    rejected: bool = False             # tenant quota bounced this submission
+    reject_reason: Optional[str] = None
 
 
 @dataclass(frozen=True)

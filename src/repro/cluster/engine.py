@@ -76,13 +76,17 @@ class EngineEvent:
     queues), :data:`ROUND` (a scheduler round ran), :data:`JOB_DONE`
     (a job completed — exactly one per completed job). ``shard`` is 0
     for a bare engine; :class:`~repro.cluster.fabric.ClusterFabric`
-    rewrites it to the originating shard index when forwarding.
+    rewrites it to the originating shard index when forwarding. The
+    elastic control plane (:mod:`repro.cluster.elastic`) additionally
+    emits fabric-level kinds (job stolen / shard resized / job
+    rejected), using ``detail`` for the human-readable specifics.
     """
 
     kind: str
     time: float
     job: Optional[Job] = None
     shard: int = 0
+    detail: Optional[str] = None
 
 
 def bank_fits_budget(cfg: "SimConfig", bank_lookup_s: float,
@@ -291,6 +295,18 @@ class ResourceView:
     def use_bank_for(self, job: Job) -> bool:
         return self._e.use_bank_for(job)
 
+    def tenant_gpu_seconds(self, tenant: str) -> float:
+        """Completed-work GPU-second ledger for ``tenant`` on this shard
+        — the quota read a budget-aware policy orders admission by.
+        (Fleet-wide enforcement, including in-flight commitments, lives
+        in :class:`~repro.cluster.elastic.ElasticController`.)"""
+        return self._e.gpu_seconds_by_tenant.get(tenant, 0.0)
+
+    def tenant_cost(self, tenant: str) -> float:
+        """Completed-work billed cost for ``tenant`` on this shard (at
+        the tenant's class price tier)."""
+        return self._e.cost_by_tenant.get(tenant, 0.0)
+
     # -- write verbs ---------------------------------------------------------
 
     def start_job(self, job: Job, gpus: int, alloc_overhead: float,
@@ -377,6 +393,7 @@ class ClusterEngine:
         self.util_samples: List[Tuple[float, float]] = []
         self.outstanding_jobs = 0      # submitted, not yet recorded
         self._subscribers: List[Callable[[EngineEvent], None]] = []
+        self._rounds_armed = 0         # ROUND events currently queued
 
     # -- event stream ---------------------------------------------------------
 
@@ -414,6 +431,18 @@ class ClusterEngine:
 
     def _push(self, t: float, kind: str, payload: Any = None) -> None:
         heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def _push_round(self, t: float) -> None:
+        self._rounds_armed += 1
+        self._push(t, ROUND)
+
+    def ensure_round(self, at: float) -> None:
+        """Arm a scheduler round at ``at`` (clamped to now) if none is
+        queued. Used by mid-run injection (:meth:`admit_at`): a drained
+        engine's round chain has stopped, and without re-arming an
+        injected job would sit in pending forever."""
+        if self._rounds_armed == 0:
+            self._push_round(max(at, self.now))
 
     def pool(self, llm: str) -> WarmPool:
         if llm not in self.pools:
@@ -522,12 +551,65 @@ class ClusterEngine:
         self.outstanding_jobs += 1
         self._push(max(job.submit_time, self.now), ARRIVAL, job)
 
+    # -- elastic-mechanism verbs (used by the fabric control plane) ------------
+
+    def admit_at(self, job: Job, at: float) -> None:
+        """Inject ``job`` mid-run with an arrival at ``max(at, now)`` —
+        the work-stealing requeue path. Unlike :meth:`submit` this also
+        re-arms the scheduler-round chain: a drained engine would
+        otherwise never look at its pending queue again."""
+        self.outstanding_jobs += 1
+        t = max(at, self.now)
+        self._push(t, ARRIVAL, job)
+        self.ensure_round(t)
+
+    def extract_pending(self, job_id: int) -> Optional[Job]:
+        """Remove and return a still-pending job (the donor half of a
+        steal); ``None`` if the job is not pending here — already
+        running, done, or still an undelivered arrival event."""
+        for llm, queue in self.pending.items():
+            for k, j in enumerate(queue):
+                if j.job_id == job_id:
+                    queue.pop(k)
+                    self.outstanding_jobs -= 1
+                    return j
+        return None
+
+    def pending_jobs(self) -> List[Job]:
+        """Every job currently in a pending queue (all LLMs)."""
+        return [j for q in self.pending.values() for j in q]
+
+    def queued_arrivals(self) -> List[Job]:
+        """Jobs submitted but whose arrival event has not fired yet."""
+        return [p for _, _, k, p in self._events if k == ARRIVAL]
+
+    def finish_time_of(self, job_id: int) -> Optional[float]:
+        """The scheduled completion time of a running job (None if the
+        job is not running)."""
+        return self._finish_at.get(job_id)
+
+    def resize(self, new_max_gpus: int) -> int:
+        """Grow or shrink this engine's fleet slice between scheduling
+        rounds. Growth adds cold (free, unbilled) GPUs; shrinkage can
+        only take cold GPUs — warm and busy capacity is never revoked,
+        so ledgers and running jobs are untouched. Returns the actual
+        new capacity (a shrink is clamped to the free cold pool)."""
+        delta = new_max_gpus - self.cfg.max_gpus
+        if delta >= 0:
+            self.cold_free += delta
+        else:
+            take = min(-delta, self.cold_free)
+            self.cold_free -= take
+            delta = -take
+        self.cfg.max_gpus += delta
+        return self.cfg.max_gpus
+
     def begin(self, jobs: Sequence[Job] = ()) -> None:
         """Submit ``jobs`` and arm the scheduler-round clock. Follow with
         :meth:`step` until it returns False, then :meth:`finish`."""
         for j in jobs:
             self.submit(j)
-        self._push(self.now, ROUND)
+        self._push_round(self.now)
 
     def has_events(self) -> bool:
         return bool(self._events)
@@ -562,6 +644,7 @@ class ClusterEngine:
         elif kind == JOB_DONE:
             self._complete(payload)
         elif kind == ROUND:
+            self._rounds_armed -= 1
             self._maintain()
             self._schedule()
             self.util_samples.append(
@@ -573,7 +656,7 @@ class ClusterEngine:
                 or any(k == ARRIVAL for _, _, k, _ in self._events)
             )
             if outstanding and self.now < 24 * 3600:   # hard horizon
-                self._push(self.now + self.cfg.round_interval, ROUND)
+                self._push_round(self.now + self.cfg.round_interval)
             self._emit(ROUND)
         return True
 

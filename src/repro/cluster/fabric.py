@@ -32,8 +32,15 @@ from __future__ import annotations
 
 import zlib
 from dataclasses import replace
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.cluster.elastic import (
+    JOB_REJECTED,
+    JOB_STOLEN,
+    SHARD_RESIZED,
+    ElasticConfig,
+    ElasticController,
+)
 from repro.cluster.engine import (
     ClusterEngine,
     EngineEvent,
@@ -135,6 +142,7 @@ class ClusterFabric:
         *,
         shards: int = 1,
         placement: str = "llm-affinity",
+        elastic: Optional[Union[ElasticConfig, bool]] = None,
     ):
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
@@ -153,31 +161,69 @@ class ClusterFabric:
         self._place = _PLACEMENTS[placement]
         base, rem = divmod(cfg.max_gpus, shards)
         self.shards: List[ClusterEngine] = []
+        self._subscribers: List[Callable[[EngineEvent], None]] = []
         for i in range(shards):
             shard_cfg = (cfg if shards == 1 else
                          replace(cfg, max_gpus=base + (1 if i < rem else 0)))
             self.shards.append(
                 ClusterEngine(shard_cfg, get_policy(policy)(shard_cfg)))
+            self._wire_shard(i)
         self.placed: Dict[int, int] = {}      # job_id -> shard index
+        self.rejections: List[Tuple[Job, str]] = []   # quota-bounced jobs
+        self.controller: Optional[ElasticController] = None
+        if elastic:
+            self.controller = ElasticController(
+                self, elastic if isinstance(elastic, ElasticConfig) else None)
 
     # -- streaming -----------------------------------------------------------
 
+    def _wire_shard(self, i: int) -> None:
+        """Register the one-and-only forwarding callback on shard ``i``.
+        Called exactly once per shard, at shard creation: user
+        subscriptions go through the fabric's own subscriber list, so
+        subscribing at any time — and calling :meth:`run` repeatedly —
+        never re-registers anything with an engine."""
+        self.shards[i].on_event(
+            lambda ev, _i=i: self._dispatch(replace(ev, shard=_i)))
+
+    def _dispatch(self, ev: EngineEvent) -> None:
+        for cb in list(self._subscribers):
+            cb(ev)
+
     def on_event(self, cb: Callable[[EngineEvent], None]) -> None:
         """Subscribe to the fabric-wide event stream (globally time-
-        ordered; each event's ``shard`` is the originating shard)."""
-        for i, eng in enumerate(self.shards):
-            eng.on_event(
-                lambda ev, _i=i: cb(replace(ev, shard=_i)))
+        ordered; each event's ``shard`` is the originating shard).
+
+        Subscribing any time after construction — before or between
+        :meth:`run` calls — is the contract: delivery starts with the
+        next processed event, each event is delivered exactly once per
+        subscriber, and repeated ``run()`` calls never duplicate
+        registrations. Besides the engine kinds (ARRIVAL / ROUND /
+        JOB_DONE), an elastic fabric also emits ``job_stolen`` /
+        ``shard_resized`` / ``job_rejected`` control-plane events."""
+        self._subscribers.append(cb)
 
     # -- submit / run --------------------------------------------------------
 
     def submit(self, job: Job) -> int:
         """Place ``job`` on a shard and enqueue its arrival; returns the
-        shard index. Placement only considers shards large enough for
+        shard index, or ``-1`` if a tenant quota rejected the
+        submission (recorded in :attr:`rejections` and emitted as a
+        typed ``job_rejected`` event — the job is never placed and
+        never billed). Placement only considers shards large enough for
         the job's replica unit — an uneven GPU split must not strand a
         fleet-feasible job on a too-small shard. If no shard can ever
         hold one replica the job is genuinely unschedulable and any
         shard may record the violation."""
+        if self.controller is not None:
+            reason = self.controller.admission_error(job)
+            if reason is not None:
+                self.rejections.append((job, reason))
+                self.controller.rejections += 1
+                self._dispatch(EngineEvent(
+                    kind=JOB_REJECTED, time=self.now, job=job, shard=-1,
+                    detail=reason))
+                return -1
         need = job.profile().gpus_per_replica
         eligible = [i for i, e in enumerate(self.shards)
                     if e.cfg.max_gpus >= need]
@@ -207,6 +253,56 @@ class ClusterFabric:
             _, i = min(live)
             self.shards[i].step()
         return _merge_results([eng.finish() for eng in self.shards])
+
+    # -- elastic control-plane verbs -----------------------------------------
+
+    def migrate(self, job_id: int, dst: int, *, at: Optional[float] = None
+                ) -> bool:
+        """Steal a still-pending job from its current shard onto ``dst``
+        (placement-aware requeue): extracted from the donor's pending
+        queue, re-admitted on ``dst`` with an arrival at the steal time,
+        re-arming ``dst``'s round chain if it had drained. Returns False
+        — with no state changed — if the job is not currently pending
+        (already running/done) or ``dst`` cannot hold one replica.
+        Emits a ``job_stolen`` event stamped with the receiving shard."""
+        src = self.placed.get(job_id)
+        if src is None or src == dst or not (0 <= dst < len(self.shards)):
+            return False
+        job_probe = None
+        for j in self.shards[src].pending_jobs():
+            if j.job_id == job_id:
+                job_probe = j
+                break
+        if (job_probe is not None and
+                job_probe.profile().gpus_per_replica
+                > self.shards[dst].cfg.max_gpus):
+            return False
+        job = self.shards[src].extract_pending(job_id)
+        if job is None:
+            return False
+        t = self.now if at is None else at
+        self.placed[job_id] = dst
+        self.shards[dst].admit_at(job, t)
+        self._dispatch(EngineEvent(
+            kind=JOB_STOLEN, time=t, job=job, shard=dst,
+            detail=f"shard {src} -> {dst}"))
+        return True
+
+    def resize_shard(self, i: int, new_max_gpus: int, *,
+                     at: Optional[float] = None) -> int:
+        """Grow/shrink shard ``i``'s GPU slice (autoscaling hook).
+        Shrinks only take free cold GPUs — warm pools, running jobs, and
+        ledgers are untouched — so the returned actual capacity may be
+        larger than requested. Emits a ``shard_resized`` event when the
+        capacity changed. The fleet total is the caller's to conserve."""
+        eng = self.shards[i]
+        before = eng.cfg.max_gpus
+        after = eng.resize(max(new_max_gpus, 0))
+        if after != before:
+            self._dispatch(EngineEvent(
+                kind=SHARD_RESIZED, time=self.now if at is None else at,
+                shard=i, detail=f"{before} -> {after} GPUs"))
+        return after
 
     # -- introspection -------------------------------------------------------
 

@@ -30,6 +30,22 @@ def admission_key(job: Job) -> Tuple[int, float]:
     return (-job.slo_class.priority, job.deadline)
 
 
+def tenant_over_budget(view: ResourceView, job: Job, quota) -> bool:
+    """Shard-local quota read: has ``job``'s tenant already burned its
+    :class:`~repro.cluster.elastic.TenantQuota` budget *on this shard's
+    ledgers*? Policies can use this to deprioritize (or refuse) work
+    for over-budget tenants inside a round. Fleet-wide enforcement —
+    including in-flight commitments across every shard — happens at
+    submit time in the :class:`~repro.cluster.elastic.ElasticController`;
+    this helper is the cheap, view-only approximation available to a
+    policy that never sees beyond its own shard."""
+    spent_s = view.tenant_gpu_seconds(job.tenant)
+    if quota.gpu_seconds is not None and spent_s >= quota.gpu_seconds:
+        return True
+    spent_usd = view.tenant_cost(job.tenant)
+    return quota.cost_usd is not None and spent_usd >= quota.cost_usd
+
+
 def min_replicas_for_slo(job: Job, *, used_bank: bool, slo_rem: float,
                          max_rep: int, overhead: float) -> Tuple[int, bool]:
     """The admission loop shared by deadline-aware policies: the smallest

@@ -189,6 +189,8 @@ class TenantSpec:
     slo_class: Union[str, SLOClass] = "standard"  # SLO_CLASSES key or ad-hoc
     scale: float = 1.0                # per-tenant load multiplier
     slo_emergence: float = 1.0        # per-tenant S (SLO stringency)
+    spike_prob: float = 0.12          # per-tenant burst shape: fraction of
+    spike_mult: float = 5.0           # spike minutes and their intensity
 
     def resolved_class(self) -> SLOClass:
         if isinstance(self.slo_class, SLOClass):
@@ -200,6 +202,22 @@ DEFAULT_TENANT_MIX = (
     TenantSpec("acme", load="medium", slo_class="premium", scale=0.5),
     TenantSpec("globex", load="medium", slo_class="standard"),
     TenantSpec("initech", load="high", slo_class="best-effort", scale=0.7),
+)
+
+# The elastic-control-plane stressor: heavier aggregate load than the
+# default mix, much spikier arrivals (most of a tenant's traffic lands
+# in a few burst minutes), and imbalanced per-tenant scales. Static
+# placement strands these bursts on whichever shards the placement
+# hashed them to; work stealing and queue-pressure autoscaling are
+# exactly the mechanisms that win here (`bench_multitenant` measures
+# the head-to-head).
+BURSTY_TENANT_MIX = (
+    TenantSpec("acme", load="high", slo_class="premium", scale=0.6,
+               spike_prob=0.25, spike_mult=8.0),
+    TenantSpec("globex", load="medium", slo_class="standard",
+               spike_prob=0.15, spike_mult=10.0),
+    TenantSpec("initech", load="high", slo_class="best-effort", scale=1.2,
+               spike_prob=0.3, spike_mult=6.0),
 )
 
 
@@ -219,6 +237,7 @@ def generate_tenant_mix(
         sub = generate_trace(TraceConfig(
             load=spec.load, slo_emergence=spec.slo_emergence,
             minutes=minutes, seed=seed + 7919 * (k + 1), scale=spec.scale,
+            spike_prob=spec.spike_prob, spike_mult=spec.spike_mult,
             tenant=spec.name, slo_class=cls,
         ))
         for j in sub:

@@ -1,0 +1,292 @@
+"""Elastic control plane: work stealing, autoscaling, tenant quotas,
+engine resize/extract/inject verbs, and the conservation properties the
+fabric must keep through all of them."""
+import numpy as np
+import pytest
+
+from repro.api import PromptTunerService, SubmitRequest
+from repro.cluster import (
+    BURSTY_TENANT_MIX,
+    ClusterFabric,
+    ElasticConfig,
+    JOB_REJECTED,
+    JOB_STOLEN,
+    SHARD_RESIZED,
+    SimConfig,
+    TenantQuota,
+    TraceConfig,
+    clone_jobs,
+    fleet_health,
+    generate_tenant_mix,
+    generate_trace,
+    policies,
+)
+from repro.cluster.engine import ARRIVAL, JOB_DONE, ROUND
+from repro.core.jobs import Job
+
+
+def mk_job(jid, llm="gpt2-base", submit=0.0, slo=600.0, tenant="t0",
+           iters_manual=400, iters_bank=200):
+    return Job(job_id=jid, llm=llm, submit_time=submit, slo=slo,
+               iters_manual=iters_manual, iters_bank=iters_bank,
+               tenant=tenant)
+
+
+# -- work stealing ---------------------------------------------------------------
+
+
+def _stealable_fabric():
+    """2 shards x 4 GPUs; llm-affinity strands every gpt2-base job on
+    one shard while the other idles — the textbook steal setup."""
+    return ClusterFabric(SimConfig(max_gpus=8), "prompttuner", shards=2,
+                         elastic=ElasticConfig())
+
+
+def test_steal_moves_overflow_to_idle_shard():
+    fab = _stealable_fabric()
+    events = []
+    fab.on_event(events.append)
+    jobs = [mk_job(i) for i in range(12)]
+    res = fab.run(clone_jobs(jobs))
+    stolen = [e for e in events if e.kind == JOB_STOLEN]
+    assert fab.controller.steals == len(stolen) > 0
+    # the receiving shard really ran the stolen jobs
+    src = {e.detail.split()[1] for e in stolen}
+    dst = {e.shard for e in stolen}
+    assert all(e.detail.startswith("shard ") for e in stolen)
+    assert src and all(int(s) not in dst for s in src)
+    for eng_idx in dst:
+        assert fab.shards[eng_idx].records, "steal destination never ran"
+    # stealing must help: with generous SLOs everything completes
+    assert len(res.records) == len(jobs)
+    assert all(np.isfinite(r.finish) for r in res.records)
+
+
+def test_conservation_every_job_exactly_one_shard_one_done():
+    """Property (incl. after steals): each submitted job finishes on
+    exactly one shard, with exactly one JOB_DONE event and one record."""
+    fab = _stealable_fabric()
+    events = []
+    fab.on_event(events.append)
+    jobs = [mk_job(i) for i in range(16)]
+    res = fab.run(clone_jobs(jobs))
+    done = [e for e in events if e.kind == JOB_DONE]
+    assert sorted(e.job.job_id for e in done) == [j.job_id for j in jobs]
+    assert sorted(r.job.job_id for r in res.records) == [
+        j.job_id for j in jobs]
+    per_shard = [{r.job.job_id for r in eng.records} for eng in fab.shards]
+    assert not (per_shard[0] & per_shard[1])
+    # placed map tracks the final home of every stolen job
+    for e in done:
+        assert fab.placed[e.job.job_id] == e.shard
+
+
+def test_steal_respects_replica_feasibility():
+    """A 4-GPU-replica job must never be stolen onto a shard too small
+    to ever hold one replica."""
+    # 10 GPUs over 3 shards -> 4/3/3: only shard 0 fits llama-30b
+    fab = ClusterFabric(SimConfig(max_gpus=10), "prompttuner", shards=3,
+                        elastic=ElasticConfig())
+    jobs = [mk_job(i, llm="llama-30b", slo=4000.0, iters_manual=50,
+                   iters_bank=25) for i in range(4)]
+    res = fab.run(clone_jobs(jobs))
+    assert all(r.job.job_id in {r2.job.job_id for r2 in fab.shards[0].records}
+               for r in res.records)
+    assert fab.controller.steals == 0
+
+
+def test_migrate_refuses_missing_or_running_jobs():
+    fab = ClusterFabric(SimConfig(max_gpus=8), "prompttuner", shards=2)
+    assert fab.migrate(999, 1) is False          # never submitted
+    j = mk_job(0)
+    fab.submit(j)
+    assert fab.migrate(0, fab.placed[0]) is False  # same-shard no-op
+    fab.run()
+    assert fab.migrate(0, 1 - fab.placed[0]) is False  # already done
+
+
+# -- autoscaling -----------------------------------------------------------------
+
+
+def test_autoscale_conserves_fleet_and_emits_events():
+    jobs = generate_tenant_mix(BURSTY_TENANT_MIX, minutes=5, seed=0)
+    fab = ClusterFabric(SimConfig(max_gpus=32), "prompttuner", shards=8,
+                        elastic=ElasticConfig())
+    events = []
+    fab.on_event(events.append)
+    fab.run(clone_jobs(jobs))
+    resized = [e for e in events if e.kind == SHARD_RESIZED]
+    assert fab.controller.resizes > 0 and resized
+    assert all("->" in e.detail for e in resized)
+    # every donated GPU landed on a receiver: fleet total is conserved
+    assert sum(e.cfg.max_gpus for e in fab.shards) == 32
+
+
+def test_engine_resize_grow_and_clamped_shrink():
+    eng = policies.build("prompttuner", SimConfig(max_gpus=8))
+    assert eng.resize(12) == 12
+    assert eng.cold_free == 12
+    # shrink below the cold pool is clamped to what is actually free
+    eng.run([mk_job(0, iters_manual=100, iters_bank=50)])
+    warm = sum(p.total() for p in eng.pools.values())
+    assert warm > 0
+    got = eng.resize(0)
+    assert got == warm                   # only cold GPUs were revocable
+    assert eng.cold_free == 0
+
+
+def test_admit_at_rearms_a_drained_engine():
+    eng = policies.build("prompttuner", SimConfig(max_gpus=4))
+    eng.begin([mk_job(0, iters_manual=100, iters_bank=50)])
+    while eng.step():
+        pass
+    assert eng.next_event_time() is None         # fully drained
+    late = mk_job(1, submit=eng.now, iters_manual=100, iters_bank=50)
+    eng.admit_at(late, eng.now + 5.0)
+    while eng.step():
+        pass
+    assert {r.job.job_id for r in eng.records} == {0, 1}
+    assert all(np.isfinite(r.finish) for r in eng.records)
+
+
+def test_extract_pending_removes_exactly_one():
+    eng = policies.build("prompttuner", SimConfig(max_gpus=1))
+    eng.begin([mk_job(0, iters_manual=2000, iters_bank=1000),
+               mk_job(1, iters_manual=2000, iters_bank=1000)])
+    while eng.step() and len(eng.pending_jobs()) != 1:
+        pass
+    assert len(eng.pending_jobs()) == 1
+    pending_id = eng.pending_jobs()[0].job_id
+    before = eng.outstanding_jobs
+    job = eng.extract_pending(pending_id)
+    assert job is not None and job.job_id == pending_id
+    assert eng.pending_jobs() == []
+    assert eng.outstanding_jobs == before - 1
+    assert eng.extract_pending(pending_id) is None
+
+
+def test_shard_health_pressure_signals():
+    eng = policies.build("prompttuner", SimConfig(max_gpus=4))
+    h = fleet_health([eng])[0]
+    assert h.pressure == 0.0 and h.free_capacity == 4
+    eng.begin([mk_job(i) for i in range(8)])
+    for _ in range(20):
+        eng.step()
+    h = fleet_health([eng])[0]
+    assert h.pressure > 1.0              # 8 single-GPU jobs on 4 GPUs
+    assert h.pending_jobs + len(eng.running) == 8
+
+
+# -- tenant quotas ----------------------------------------------------------------
+
+
+def test_quota_max_outstanding_rejects_with_typed_event():
+    fab = ClusterFabric(
+        SimConfig(max_gpus=8), "prompttuner", shards=2,
+        elastic=ElasticConfig(quotas={"t0": TenantQuota(max_outstanding=2)}))
+    events = []
+    fab.on_event(events.append)
+    assert fab.submit(mk_job(0)) >= 0
+    assert fab.submit(mk_job(1)) >= 0
+    assert fab.submit(mk_job(2)) == -1
+    rej = [e for e in events if e.kind == JOB_REJECTED]
+    assert len(rej) == 1 and rej[0].job.job_id == 2 and rej[0].shard == -1
+    assert "outstanding" in rej[0].detail
+    assert len(fab.rejections) == 1
+    res = fab.run()
+    # the rejected job never ran and never billed
+    assert sorted(r.job.job_id for r in res.records) == [0, 1]
+    # other tenants are unaffected
+    assert fab.submit(mk_job(3, tenant="other")) >= 0
+
+
+def test_quota_cost_cap_rejects_before_placement():
+    fab = ClusterFabric(
+        SimConfig(max_gpus=8), "prompttuner", shards=2,
+        elastic=ElasticConfig(quotas={"t0": TenantQuota(cost_usd=1e-6)}))
+    assert fab.submit(mk_job(0)) == -1
+    assert "cost cap" in fab.rejections[0][1]
+    assert fab.placed == {}
+
+
+def test_quota_gpu_second_budget_tracks_completed_spend():
+    quota = TenantQuota(gpu_seconds=200.0)
+    fab = ClusterFabric(
+        SimConfig(max_gpus=4), "prompttuner", shards=2,
+        elastic=ElasticConfig(quotas={"t0": quota}))
+    # ~60 s of single-GPU work fits the 200 GPU-s budget...
+    assert fab.submit(mk_job(0, iters_manual=500, iters_bank=250)) >= 0
+    fab.run()
+    spent = fab.controller.tenant_commitment("t0")[0]
+    assert spent > 0
+    # ...but once completed spend is on the ledger, a job whose estimate
+    # overflows the remainder is rejected
+    big = mk_job(1, submit=fab.now, iters_manual=3000, iters_bank=1500)
+    assert fab.submit(big) == -1
+    assert "budget" in fab.rejections[0][1]
+
+
+def test_service_surfaces_rejection_on_handle():
+    svc = PromptTunerService(
+        SimConfig(max_gpus=8), shards=2,
+        elastic=ElasticConfig(quotas={"acme": TenantQuota(max_outstanding=1)}))
+    req = SubmitRequest(task_id="t", llm="gpt2-base", slo=600.0,
+                        iters_manual=300, iters_bank=150, tenant="acme")
+    h1 = svc.submit(req)
+    assert not h1.rejected and h1.shard >= 0
+    h2 = svc.submit(req)
+    assert h2.rejected and h2.shard == -1
+    assert "outstanding" in h2.reject_reason
+    results = svc.run_until_idle()
+    assert [r.handle.job_id for r in results] == [h1.job_id]
+    # quotas are adjustable at runtime through the service
+    svc.set_quota("acme", TenantQuota(max_outstanding=10))
+    assert not svc.submit(req).rejected
+
+
+def test_service_set_quota_needs_elastic_fabric():
+    svc = PromptTunerService(SimConfig(max_gpus=4))
+    with pytest.raises(ValueError, match="elastic"):
+        svc.set_quota("acme", TenantQuota(max_outstanding=1))
+
+
+# -- golden safety ----------------------------------------------------------------
+
+
+def test_single_shard_elastic_is_a_noop():
+    """shards=1 with the controller attached must be float-for-float
+    identical to the plain fabric (the control loop only acts across
+    shards)."""
+    jobs = generate_trace(TraceConfig(load="low", seed=3, minutes=3))
+    ref = ClusterFabric(SimConfig(max_gpus=16), "prompttuner",
+                        shards=1).run(clone_jobs(jobs)).summary()
+    got = ClusterFabric(SimConfig(max_gpus=16), "prompttuner", shards=1,
+                        elastic=True).run(clone_jobs(jobs)).summary()
+    assert got == ref
+
+
+def test_elastic_true_uses_default_config():
+    fab = ClusterFabric(SimConfig(max_gpus=8), "prompttuner", shards=2,
+                        elastic=True)
+    assert fab.controller is not None
+    assert fab.controller.cfg.steal_enabled
+    assert ClusterFabric(SimConfig(max_gpus=8), "prompttuner",
+                         shards=2).controller is None
+
+
+def test_elastic_beats_static_on_bursty_mix():
+    """The tentpole claim, at test scale: on the bursty mix the full
+    control plane (steal + autoscale + best-effort cost cap) must cut
+    the SLO violation rate AND the billed cost versus the same fleet
+    statically placed."""
+    jobs = generate_tenant_mix(BURSTY_TENANT_MIX, minutes=5, seed=0)
+    static = ClusterFabric(SimConfig(max_gpus=32), "prompttuner",
+                           shards=8).run(clone_jobs(jobs)).summary()
+    fab = ClusterFabric(
+        SimConfig(max_gpus=32), "prompttuner", shards=8,
+        elastic=ElasticConfig(
+            quotas={"initech": TenantQuota(cost_usd=5.0)}))
+    elastic = fab.run(clone_jobs(jobs)).summary()
+    assert elastic["slo_violation_pct"] < static["slo_violation_pct"]
+    assert elastic["cost_usd"] < static["cost_usd"]
+    assert fab.controller.steals > 0

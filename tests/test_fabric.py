@@ -109,6 +109,33 @@ def test_placement_registry_and_llm_affinity():
         ClusterFabric(SimConfig(max_gpus=2), "fifo", shards=4)
 
 
+def test_register_placement_round_trip():
+    """Custom placements registered after import are listed, usable by
+    name, and actually consulted by the fabric."""
+    from repro.cluster.fabric import _PLACEMENTS, register_placement
+
+    calls = []
+
+    @register_placement("always-last")
+    def _always_last(job, shards):
+        calls.append(job.job_id)
+        return len(shards) - 1
+
+    try:
+        assert "always-last" in placements()
+        fab = ClusterFabric(SimConfig(max_gpus=8), "fifo", shards=4,
+                            placement="always-last")
+        jobs = generate_trace(TraceConfig(load="low", seed=0, minutes=1))
+        for j in jobs:
+            assert fab.submit(j) == 3
+        assert calls == [j.job_id for j in jobs]
+    finally:
+        del _PLACEMENTS["always-last"]
+    with pytest.raises(KeyError, match="unknown placement"):
+        ClusterFabric(SimConfig(max_gpus=8), "fifo", shards=2,
+                      placement="always-last")
+
+
 def test_least_loaded_spreads_and_hash_is_stable():
     jobs = generate_trace(TraceConfig(load="medium", seed=5, minutes=3))
     fab = ClusterFabric(SimConfig(max_gpus=32), "prompttuner", shards=4,
@@ -146,6 +173,35 @@ def test_placement_respects_shard_capacity():
     fab.submit(mk())
     res = fab.run()
     assert res.records[0].violated and res.records[0].gpus == 0
+
+
+def test_on_event_subscribe_after_construction_and_repeated_run():
+    """on_event must accept subscribers any time before run(), and a
+    second run() must not re-register shard forwarders (each event is
+    delivered exactly once, ever)."""
+    fab = ClusterFabric(SimConfig(max_gpus=16), "prompttuner", shards=2)
+    first = generate_trace(TraceConfig(load="low", seed=7, minutes=2))
+    events = []
+    fab.on_event(events.append)          # after construction, before run
+    fab.run(clone_jobs(first))
+    done1 = [e for e in events if e.kind == JOB_DONE]
+    assert len(done1) == len(first)
+
+    # subscribe a second callback between runs; resubmit fresh jobs
+    late_events = []
+    fab.on_event(late_events.append)
+    second = clone_jobs(first)
+    for j in second:
+        j.job_id += 10_000
+        j.submit_time += fab.now
+    fab.run(second)
+    done2 = [e for e in events if e.kind == JOB_DONE]
+    # exactly one JOB_DONE per job across both runs — double-registered
+    # forwarders would duplicate every second-run event
+    assert len(done2) == len(first) + len(second)
+    assert len([e for e in late_events if e.kind == JOB_DONE]) == len(second)
+    done_ids = [e.job.job_id for e in done2]
+    assert len(done_ids) == len(set(done_ids))
 
 
 # -- incremental step API ---------------------------------------------------------
