@@ -1,14 +1,39 @@
-"""Kernel-level benchmark: the fused score-CE path vs the naive and
-chunked XLA paths — wall time on CPU (XLA paths) and an analytic HBM
-traffic comparison for the TPU target."""
+"""Kernel-level benchmark: fused Pallas paths vs the naive XLA paths.
+
+Two sections:
+
+* ``score_ce`` — the Eqn-1 scoring CE (naive vs chunked XLA wall time on
+  CPU + analytic HBM traffic of the fused kernel on the TPU target).
+* ``decode``  — the serving-side per-step attention: split-KV
+  ``flash_decode`` (GQA) and absorbed ``mla_decode`` (DeepSeek-V2 /
+  Kimi-K2 latent) vs the unfused XLA decode. Wall times on CPU are
+  informational; the gated numbers are the *analytic* HBM bytes per
+  decode step from ``repro.roofline.decode`` (deterministic, so a >10%
+  regression means the traffic model — i.e. the kernel design — got
+  worse, not that CI was noisy) plus a parity error of the real kernel
+  in interpret mode.
+
+Writes ``artifacts/bench/kernels.json`` every run; set
+``WRITE_BENCH_BASELINE=1`` to refresh the committed ``BENCH_kernels.json``
+baseline at the repo root, which ``benchmarks.check_regression`` diffs
+in CI (non-blocking).
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Dict
 
 import numpy as np
 
 from benchmarks.common import fmt, save_result, table
+
+ROOT_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
+
+SPLITS = 8          # split-KV partitions priced + used by the kernels
+DECODE_L = 16384    # cache length for the decode sweep
 
 
 def ce_paths(T: int = 2048, D: int = 256, V: int = 8192,
@@ -73,6 +98,134 @@ def ce_paths(T: int = 2048, D: int = 256, V: int = 8192,
     }
 
 
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+
+def _bench_jit(fn, *args, iters: int = 5) -> float:
+    fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        fn(*args).block_until_ready()
+    return (time.time() - t0) / iters
+
+
+def gqa_decode_point(name: str, *, B: int, H: int, Hkv: int, hd: int,
+                     L: int, iters: int = 5) -> Dict:
+    """One GQA decode config: XLA wall time + analytic traffic + a
+    kernel parity check on a scaled-down shape (interpret mode)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_decode import flash_decode
+    from repro.kernels.ref import flash_decode_ref
+    from repro.roofline import HBM_BW, gqa_decode_hbm_bytes
+
+    key = jax.random.key(1)
+    q = jax.random.normal(key, (B, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hkv, L, hd),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hkv, L, hd),
+                          jnp.float32)
+    t_xla = _bench_jit(jax.jit(flash_decode_ref), q, k, v, iters=iters)
+
+    # parity at a CI-friendly scale (interpret mode is a python loop)
+    Ls = 512
+    out = flash_decode(q, k[:, :, :Ls], v[:, :, :Ls], kv_len=Ls - 3,
+                       splits=4, bk=128, interpret=True)
+    ref = flash_decode_ref(q, k[:, :, :Ls], v[:, :, :Ls], kv_len=Ls - 3)
+    err = float(np.abs(np.asarray(out) - np.asarray(ref)).max())
+
+    traffic = gqa_decode_hbm_bytes(B=B, H=H, Hkv=Hkv, hd=hd, L=L,
+                                   splits=SPLITS)
+    return {
+        "point": f"decode-gqa {name} L{L}",
+        "shape": f"B{B} H{H} kv{Hkv} hd{hd} L{L}",
+        "xla_cpu_ms": t_xla * 1e3,
+        "parity_err": err,
+        "naive_hbm_bytes": traffic["naive_bytes"],
+        "fused_hbm_bytes": traffic["fused_bytes"],
+        "floor_hbm_bytes": traffic["floor_bytes"],
+        "reduction_x": traffic["reduction_x"],
+        "naive_step_ms": traffic["naive_bytes"] / HBM_BW * 1e3,
+        "fused_step_ms": traffic["fused_bytes"] / HBM_BW * 1e3,
+    }
+
+
+def mla_decode_point(name: str, *, B: int, H: int, r: int, rd: int,
+                     L: int, scale: float, iters: int = 5) -> Dict:
+    """One absorbed-MLA decode config (latent cache, per SNIPPETS §3)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.mla_decode import mla_decode
+    from repro.kernels.ref import mla_decode_ref
+    from repro.roofline import HBM_BW, mla_decode_hbm_bytes
+
+    key = jax.random.key(2)
+    ql = jax.random.normal(key, (B, H, r), jnp.float32) * 0.1
+    qp = jax.random.normal(jax.random.fold_in(key, 1), (B, H, rd),
+                           jnp.float32)
+    ckv = jax.random.normal(jax.random.fold_in(key, 2), (B, L, r),
+                            jnp.float32) * 0.1
+    kpe = jax.random.normal(jax.random.fold_in(key, 3), (B, L, rd),
+                            jnp.float32)
+    import functools
+    ref = jax.jit(functools.partial(mla_decode_ref, scale=scale))
+    t_xla = _bench_jit(ref, ql, qp, ckv, kpe, iters=iters)
+
+    Ls = 512
+    out = mla_decode(ql, qp, ckv[:, :Ls], kpe[:, :Ls], scale=scale,
+                     kv_len=Ls - 5, splits=4, bk=128, interpret=True)
+    want = mla_decode_ref(ql, qp, ckv[:, :Ls], kpe[:, :Ls], scale=scale,
+                          kv_len=Ls - 5)
+    err = float(np.abs(np.asarray(out) - np.asarray(want)).max())
+
+    traffic = mla_decode_hbm_bytes(B=B, H=H, r=r, rd=rd, L=L, splits=SPLITS)
+    return {
+        "point": f"decode-mla {name} L{L}",
+        "shape": f"B{B} H{H} r{r} rd{rd} L{L}",
+        "xla_cpu_ms": t_xla * 1e3,
+        "parity_err": err,
+        "naive_hbm_bytes": traffic["naive_bytes"],
+        "fused_hbm_bytes": traffic["fused_bytes"],
+        "floor_hbm_bytes": traffic["floor_bytes"],
+        "reduction_x": traffic["reduction_x"],
+        "naive_step_ms": traffic["naive_bytes"] / HBM_BW * 1e3,
+        "fused_step_ms": traffic["fused_bytes"] / HBM_BW * 1e3,
+    }
+
+
+def decode_sweep(quick: bool = False) -> Dict:
+    """GQA + MLA decode configs drawn from the assigned arch registry so
+    the priced shapes track the real model dims."""
+    from repro.configs import get_config
+
+    L = 2048 if quick else DECODE_L
+    B = 2 if quick else 8
+    points = []
+
+    gqa_archs = ["qwen2-7b"] if quick else [
+        "qwen2-7b", "phi3-medium-14b", "command-r-plus-104b"]
+    for arch in gqa_archs:
+        cfg = get_config(arch)
+        points.append(gqa_decode_point(
+            arch, B=B, H=cfg.num_heads, Hkv=cfg.kv_heads(),
+            hd=cfg.resolved_head_dim(), L=L))
+
+    mla_archs = ["deepseek-v2-236b"] if quick else [
+        "deepseek-v2-236b", "kimi-k2-1t-a32b"]
+    for arch in mla_archs:
+        cfg = get_config(arch)
+        m = cfg.mla
+        scale = 1.0 / (m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5
+        points.append(mla_decode_point(
+            arch, B=B, H=cfg.num_heads, r=m.kv_lora_rank,
+            rd=m.qk_rope_head_dim, L=L, scale=scale))
+    return {"L": L, "B": B, "points": points}
+
+
 def run(quick: bool = False) -> Dict:
     shapes = [(1024, 128, 4096)] if quick else [
         (1024, 128, 4096), (2048, 256, 8192), (4096, 256, 32768)]
@@ -85,9 +238,47 @@ def run(quick: bool = False) -> Dict:
                 "HBM traffic reduction (TPU analytic)",
                 ["shape", "naive ms", "chunked ms", "xla x",
                  "fused HBM x", "err"], rows))
-    save_result("kernels", out)
-    return out
+
+    dec = decode_sweep(quick=quick)
+    out["decode"] = dec
+    rows = [[p["point"], p["shape"], fmt(p["xla_cpu_ms"], 1),
+             fmt(p["naive_step_ms"], 3), fmt(p["fused_step_ms"], 3),
+             fmt(p["reduction_x"], 2), f"{p['parity_err']:.1e}"]
+            for p in dec["points"]]
+    print(table("decode paths: split-KV flash / MLA latent vs naive XLA "
+                "(TPU-analytic ms/step @ v5e HBM)",
+                ["point", "shape", "xla cpu ms", "naive ms", "fused ms",
+                 "HBM x", "parity err"], rows))
+    for p in dec["points"]:
+        assert p["fused_hbm_bytes"] < p["naive_hbm_bytes"], p["point"]
+
+    # regression-gated doc: deterministic analytic metrics only (lower
+    # is better), keyed the way check_regression expects
+    doc = {
+        "config": {"quick": quick, "splits": SPLITS, "L": dec["L"],
+                   "B": dec["B"]},
+        "config_keys": ["quick", "splits", "L", "B"],
+        "metrics": ["fused_hbm_bytes", "fused_step_ms"],
+        "points": {p["point"]: {"total": {
+            "fused_hbm_bytes": p["fused_hbm_bytes"],
+            "fused_step_ms": p["fused_step_ms"],
+            "naive_hbm_bytes": p["naive_hbm_bytes"],
+            "reduction_x": p["reduction_x"],
+            "parity_err": p["parity_err"],
+        }} for p in dec["points"]},
+        "score_ce": out["score_ce"],
+    }
+    save_result("kernels", doc)
+    if os.environ.get("WRITE_BENCH_BASELINE"):
+        with open(ROOT_JSON, "w") as f:
+            json.dump(doc, f, indent=1, default=float)
+        print(f"wrote baseline {os.path.abspath(ROOT_JSON)}")
+    else:
+        print("baseline untouched (set WRITE_BENCH_BASELINE=1 to refresh "
+              f"{os.path.abspath(ROOT_JSON)})")
+    return doc
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(quick="--quick" in sys.argv)

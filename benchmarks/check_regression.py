@@ -1,26 +1,38 @@
-"""Diff a fresh BENCH_*.json against the committed baseline.
+"""Diff fresh BENCH_*.json runs against the committed baselines.
 
     PYTHONPATH=src python -m benchmarks.check_regression \
-        [--baseline BENCH_multitenant.json] [--fresh artifacts/bench/multitenant.json] \
-        [--threshold 0.10]
+        [--pair BENCH_multitenant.json:artifacts/bench/multitenant.json] \
+        [--pair BENCH_kernels.json:artifacts/bench/kernels.json] \
+        [--glob 'BENCH_*.json'] [--threshold 0.10]
 
-Compares every shared sweep point on SLO violation rate and billed
-cost; a point regresses when the fresh value exceeds the baseline by
-more than ``threshold`` (relative, with a small absolute floor so near-
-zero baselines don't flag on noise). Exits non-zero when regressions
-are found — CI runs this as a non-blocking job, so a red diff flags the
-PR without failing the build.
+With no ``--pair`` the default glob discovers every committed
+``BENCH_<name>.json`` at the repo root and pairs it with the fresh run
+at ``artifacts/bench/<name>.json`` (honoring ``REPRO_BENCH_OUT``).
+
+Each baseline doc declares its own gated metrics (top-level
+``"metrics"``, lower-is-better; default: the multitenant pair of SLO
+violation rate and billed cost) and the config keys that must match for
+the runs to be comparable (``"config_keys"``; mismatched sweep configs
+skip the diff instead of flagging). A point regresses when the fresh
+value exceeds the baseline by more than ``threshold`` (relative, with a
+small absolute floor so near-zero baselines don't flag on noise). Exits
+non-zero when any pair regresses — CI runs this as a non-blocking job,
+so a red diff flags the PR without failing the build.
 """
 from __future__ import annotations
 
 import argparse
+import glob as globlib
 import json
 import os
 import sys
-from typing import Dict, List, Tuple
+from typing import Dict, List, Sequence, Tuple
 
-METRICS = ("slo_violation_pct", "cost_usd")
+DEFAULT_METRICS = ("slo_violation_pct", "cost_usd")
+DEFAULT_CONFIG_KEYS = ("gpus", "minutes", "seeds")
 ABS_FLOOR = {"slo_violation_pct": 1.0, "cost_usd": 1.0}
+FRESH_DIR = os.environ.get("REPRO_BENCH_OUT", os.path.join("artifacts",
+                                                           "bench"))
 
 
 def _points(doc: Dict) -> Dict[str, Dict[str, float]]:
@@ -28,66 +40,112 @@ def _points(doc: Dict) -> Dict[str, Dict[str, float]]:
             doc.get("points", {}).items()}
 
 
-def compare(baseline: Dict, fresh: Dict,
-            threshold: float) -> List[Tuple[str, str, float, float]]:
+def compare(baseline: Dict, fresh: Dict, threshold: float,
+            metrics: Sequence[str]) -> List[Tuple[str, str, float, float]]:
     """Returns (point, metric, base, new) for every regression."""
     base_pts = _points(baseline)
     fresh_pts = _points(fresh)
     regressions = []
     for name in sorted(set(base_pts) & set(fresh_pts)):
-        for metric in METRICS:
+        for metric in metrics:
             b = base_pts[name].get(metric)
             f = fresh_pts[name].get(metric)
             if b is None or f is None:
                 continue
-            if f > b * (1.0 + threshold) + ABS_FLOOR[metric] * threshold:
+            floor = ABS_FLOOR.get(metric, 0.0)
+            if f > b * (1.0 + threshold) + floor * threshold:
                 regressions.append((name, metric, b, f))
     return regressions
 
 
-def main(argv: List[str] | None = None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", default="BENCH_multitenant.json")
-    ap.add_argument("--fresh",
-                    default=os.path.join("artifacts", "bench",
-                                         "multitenant.json"))
-    ap.add_argument("--threshold", type=float, default=0.10)
-    args = ap.parse_args(argv)
-
-    if not os.path.exists(args.baseline):
-        print(f"no committed baseline at {args.baseline}; nothing to diff")
+def check_pair(baseline_path: str, fresh_path: str,
+               threshold: float) -> int:
+    """Diff one baseline:fresh pair; returns 1 on regression else 0."""
+    tag = os.path.basename(baseline_path)
+    if not os.path.exists(baseline_path):
+        print(f"[{tag}] no committed baseline at {baseline_path}; "
+              "nothing to diff")
         return 0
-    if not os.path.exists(args.fresh):
-        print(f"no fresh result at {args.fresh}; run the benchmark first")
+    if not os.path.exists(fresh_path):
+        print(f"[{tag}] no fresh result at {fresh_path}; "
+              "run the benchmark first")
         return 0
-    with open(args.baseline) as fh:
+    with open(baseline_path) as fh:
         baseline = json.load(fh)
-    with open(args.fresh) as fh:
+    with open(fresh_path) as fh:
         fresh = json.load(fh)
 
     base_cfg = baseline.get("config", {})
     fresh_cfg = fresh.get("config", {})
-    comparable = all(base_cfg.get(k) == fresh_cfg.get(k)
-                     for k in ("gpus", "minutes", "seeds"))
-    if not comparable:
-        print("baseline and fresh runs use different sweep configs "
-              f"(baseline {base_cfg.get('gpus')}g/{base_cfg.get('minutes')}m/"
-              f"{base_cfg.get('seeds')}s vs fresh {fresh_cfg.get('gpus')}g/"
-              f"{fresh_cfg.get('minutes')}m/{fresh_cfg.get('seeds')}s); "
-              "skipping the diff")
+    cfg_keys = baseline.get("config_keys", DEFAULT_CONFIG_KEYS)
+    if any(base_cfg.get(k) != fresh_cfg.get(k) for k in cfg_keys):
+        diffs = {k: (base_cfg.get(k), fresh_cfg.get(k)) for k in cfg_keys
+                 if base_cfg.get(k) != fresh_cfg.get(k)}
+        print(f"[{tag}] baseline and fresh runs use different sweep "
+              f"configs ({diffs}); skipping the diff")
         return 0
 
-    regressions = compare(baseline, fresh, args.threshold)
+    metrics = tuple(baseline.get("metrics", DEFAULT_METRICS))
+    regressions = compare(baseline, fresh, threshold, metrics)
     shared = len(set(_points(baseline)) & set(_points(fresh)))
     if not regressions:
-        print(f"OK: no >{args.threshold:.0%} regressions across "
-              f"{shared} shared points ({', '.join(METRICS)})")
+        print(f"[{tag}] OK: no >{threshold:.0%} regressions across "
+              f"{shared} shared points ({', '.join(metrics)})")
         return 0
-    print(f"REGRESSIONS (> {args.threshold:.0%} over baseline):")
+    print(f"[{tag}] REGRESSIONS (> {threshold:.0%} over baseline):")
     for name, metric, b, f in regressions:
-        print(f"  {name}: {metric} {b:.2f} -> {f:.2f} "
-              f"(+{(f - b) / max(b, 1e-9):.0%})")
+        print(f"  {name}: {metric} {b:.4g} -> {f:.4g} "
+              f"(+{(f - b) / max(abs(b), 1e-9):.0%})")
     return 1
+
+
+def default_pairs(pattern: str) -> List[Tuple[str, str]]:
+    """BENCH_<name>.json at the repo root -> artifacts/bench/<name>.json."""
+    pairs = []
+    for base in sorted(globlib.glob(pattern)):
+        name = os.path.basename(base)
+        if name.startswith("BENCH_") and name.endswith(".json"):
+            stem = name[len("BENCH_"):-len(".json")]
+        else:
+            stem = os.path.splitext(name)[0]
+        pairs.append((base, os.path.join(FRESH_DIR, f"{stem}.json")))
+    return pairs
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", action="append", default=[],
+                    metavar="BASELINE:FRESH",
+                    help="baseline:fresh path pair; repeatable")
+    ap.add_argument("--glob", default="BENCH_*.json",
+                    help="discover baselines by glob when no --pair given")
+    ap.add_argument("--baseline", default=None,
+                    help="(legacy) single baseline path")
+    ap.add_argument("--fresh", default=None,
+                    help="(legacy) single fresh path")
+    ap.add_argument("--threshold", type=float, default=0.10)
+    args = ap.parse_args(argv)
+
+    pairs: List[Tuple[str, str]] = []
+    for spec in args.pair:
+        parts = spec.split(":")
+        if len(parts) != 2:
+            ap.error(f"--pair expects BASELINE:FRESH, got {spec!r}")
+        pairs.append((parts[0], parts[1]))
+    if args.baseline or args.fresh:
+        base = args.baseline or "BENCH_multitenant.json"
+        fresh = args.fresh or os.path.join(FRESH_DIR, "multitenant.json")
+        pairs.append((base, fresh))
+    if not pairs:
+        pairs = default_pairs(args.glob)
+    if not pairs:
+        print(f"no baselines match {args.glob!r}; nothing to diff")
+        return 0
+
+    rc = 0
+    for baseline_path, fresh_path in pairs:
+        rc |= check_pair(baseline_path, fresh_path, args.threshold)
+    return rc
 
 
 if __name__ == "__main__":

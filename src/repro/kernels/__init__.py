@@ -2,12 +2,26 @@
 
   score_ce.py        — fused Eqn-1 scoring CE (Prompt Bank hot spot)
   flash_attention.py — GQA flash attention (causal / sliding window / cache)
+  flash_decode.py    — split-KV flash decode (single-token GQA inference)
+  mla_decode.py      — absorbed MLA latent decode (DeepSeek-V2/Kimi-K2)
   rwkv_wkv.py        — RWKV6 chunked WKV scan (data-dependent decay)
 
 Each kernel has a pure-jnp oracle in ref.py and model-layout wrappers in
 ops.py; tests sweep shapes/dtypes against the oracles (interpret=True on
 CPU, Mosaic on real TPUs).
 """
-from repro.kernels.ops import fused_score_ce, gqa_flash, wkv
+from repro.kernels.ops import (
+    fused_score_ce,
+    gqa_flash,
+    gqa_flash_decode,
+    mla_flash_decode,
+    wkv,
+)
 
-__all__ = ["fused_score_ce", "gqa_flash", "wkv"]
+__all__ = [
+    "fused_score_ce",
+    "gqa_flash",
+    "gqa_flash_decode",
+    "mla_flash_decode",
+    "wkv",
+]

@@ -45,6 +45,59 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0,
     return out.reshape(B, H, S, hd).astype(q.dtype)
 
 
+def flash_decode_ref(q, k, v, *, kv_len=None, q_pos=None, window=0):
+    """Single-token GQA decode: q (B,H,hd); k,v (B,Hkv,L,hd) -> (B,H,hd).
+
+    KV column j is attended iff j < kv_len, j <= q_pos (default
+    kv_len - 1) and, with a window, j > q_pos - window. ``kv_len`` /
+    ``q_pos`` are scalars (dynamic ok) shared across the batch."""
+    B, H, hd = q.shape
+    Hkv, L = k.shape[1], k.shape[2]
+    G = H // Hkv
+    if kv_len is None:
+        kv_len = L
+    if q_pos is None:
+        q_pos = kv_len - 1
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, hd)
+    scores = jnp.einsum("bhgd,bhld->bhgl", qf, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(hd)
+    kpos = jnp.arange(L)
+    mask = (kpos < kv_len) & (kpos <= q_pos)
+    if window and window > 0:
+        mask &= kpos > q_pos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgl,bhld->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def mla_decode_ref(q_lat, q_pe, ckv, kpe, *, scale, kv_len=None, q_pos=None):
+    """Dense absorbed-MLA decode: q_lat (B,H,r); q_pe (B,H,rd);
+    ckv (B,L,r); kpe (B,L,rd) -> (B,H,r) latent output.
+
+        scores = (q_lat @ ckv^T + q_pe @ kpe^T) * scale
+        out    = softmax(scores) @ ckv
+
+    Same kv_len / q_pos masking convention as ``flash_decode_ref``."""
+    L = ckv.shape[1]
+    if kv_len is None:
+        kv_len = L
+    if q_pos is None:
+        q_pos = kv_len - 1
+    scores = (
+        jnp.einsum("bhr,blr->bhl", q_lat.astype(jnp.float32),
+                   ckv.astype(jnp.float32))
+        + jnp.einsum("bhp,blp->bhl", q_pe.astype(jnp.float32),
+                     kpe.astype(jnp.float32))
+    ) * scale
+    kpos = jnp.arange(L)
+    mask = (kpos < kv_len) & (kpos <= q_pos)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhl,blr->bhr", probs, ckv.astype(jnp.float32))
+    return out.astype(q_lat.dtype)
+
+
 def rwkv6_wkv_ref(r, k, v, logw, u, state0):
     """Sequential WKV recurrence (the exact semantics the chunked kernel
     must reproduce).

@@ -26,6 +26,12 @@ _PLAIN_ATTN_MAX_KV = 4096   # use blockwise online softmax above this
 _KV_BLOCK = 1024
 
 
+def _flash_decode_default() -> bool:
+    """Auto-gate for the Pallas decode kernels: on for real TPUs, off on
+    CPU so the sim/test XLA paths (and their goldens) are untouched."""
+    return jax.default_backend() == "tpu"
+
+
 # ---------------------------------------------------------------------------
 # Core softmax attention (shared by GQA / MLA / cross-attention)
 # ---------------------------------------------------------------------------
@@ -198,12 +204,19 @@ def gqa_decode(
     cache_len: jax.Array,         # scalar int32: tokens already in cache
     *,
     window: Optional[int] = None,
+    use_flash: Optional[bool] = None,
 ) -> Tuple[jax.Array, Dict]:
     """One decode step against a (possibly ring-buffered) KV cache.
 
     The cache stores roped keys with absolute positions in ``pos``
     (-1 = empty). With a sliding window the buffer length equals the
     window and insertion wraps.
+
+    ``use_flash`` routes the attention through the split-KV Pallas
+    kernel (``repro.kernels.flash_decode``). Valid only while the cache
+    is a contiguous prefix (no ring wrap: cache_len < buffer length),
+    which holds whenever the buffer is sized to max_seq_len — so the
+    auto default enables it on TPU for the unwindowed path only.
     """
     B = x.shape[0]
     H, Hkv, hd = cfg.num_heads, cfg.kv_heads(), cfg.resolved_head_dim()
@@ -219,11 +232,22 @@ def gqa_decode(
     )
     valid = pos_cache >= 0
     w = cfg.sliding_window if window is None else window
-    qg = q.reshape(B, 1, Hkv, G, hd)
-    out = scaled_attention(
-        qg, k_cache, v_cache,
-        q_pos=positions, kv_pos=pos_cache, kv_valid=valid, causal=True, window=w,
-    )
+    if use_flash is None:
+        use_flash = _flash_decode_default() and not w
+    if use_flash:
+        from repro.kernels.ops import gqa_flash_decode
+
+        out = gqa_flash_decode(
+            q, k_cache, v_cache, kv_len=cache_len + 1, q_pos=cache_len,
+            window=w or 0,
+        ).reshape(B, 1, Hkv, G, hd)
+    else:
+        qg = q.reshape(B, 1, Hkv, G, hd)
+        out = scaled_attention(
+            qg, k_cache, v_cache,
+            q_pos=positions, kv_pos=pos_cache, kv_valid=valid, causal=True,
+            window=w,
+        )
     y = jnp.einsum("bshgd,hgdk->bsk", out,
                    p["wo"].reshape(Hkv, G, hd, cfg.d_model))
     return y, {"k": k_cache, "v": v_cache, "pos": pos_cache}
@@ -311,10 +335,16 @@ def mla_init_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> Dict:
     }
 
 
-def mla_decode(cfg: ModelConfig, p, x, cache, cache_len):
+def mla_decode(cfg: ModelConfig, p, x, cache, cache_len, *,
+               use_flash: Optional[bool] = None):
     """Absorbed MLA decode: attention runs in the latent space, so the cache
     is only (L, kv_lora + rope_dim) — O(L) memory, the property that lets
-    deepseek-v2 run long_500k without a sliding window."""
+    deepseek-v2 run long_500k without a sliding window.
+
+    ``use_flash`` routes the latent attention through the split-KV
+    Pallas kernel (``repro.kernels.mla_decode``); same contiguous-prefix
+    requirement as ``gqa_decode`` (the MLA cache never windows, so any
+    buffer sized to max_seq_len qualifies)."""
     m = cfg.mla
     B = x.shape[0]
     H = cfg.num_heads
@@ -330,15 +360,25 @@ def mla_decode(cfg: ModelConfig, p, x, cache, cache_len):
     )
     # absorb wkv_b_k into the query: q_lat (B,1,H,kv_lora)
     q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wkv_b_k"])
-    scores = (
-        jnp.einsum("bshr,blr->bhsl", q_lat, c_kv)
-        + jnp.einsum("bshk,blk->bhsl", q_rope, k_rope)
-    ).astype(jnp.float32)
-    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    valid = (pos >= 0) & (pos <= positions[:, :1])                 # (B, L)
-    scores = jnp.where(valid[:, None, None, :], scores * scale, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
-    out_lat = jnp.einsum("bhsl,blr->bshr", probs, c_kv)            # (B,1,H,r)
+    scale = 1.0 / (m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5
+    if use_flash is None:
+        use_flash = _flash_decode_default()
+    if use_flash:
+        from repro.kernels.ops import mla_flash_decode
+
+        out_lat = mla_flash_decode(
+            q_lat, q_rope, c_kv, k_rope, scale=scale,
+            kv_len=cache_len + 1, q_pos=cache_len,
+        )                                                          # (B,1,H,r)
+    else:
+        scores = (
+            jnp.einsum("bshr,blr->bhsl", q_lat, c_kv)
+            + jnp.einsum("bshk,blk->bhsl", q_rope, k_rope)
+        ).astype(jnp.float32)
+        valid = (pos >= 0) & (pos <= positions[:, :1])             # (B, L)
+        scores = jnp.where(valid[:, None, None, :], scores * scale, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+        out_lat = jnp.einsum("bhsl,blr->bshr", probs, c_kv)        # (B,1,H,r)
     out = jnp.einsum("bshr,rhv->bshv", out_lat, p["wkv_b_v"])
     y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
     return y, {"c_kv": c_kv, "k_rope": k_rope, "pos": pos}

@@ -1,3 +1,7 @@
+from repro.roofline.decode import (
+    gqa_decode_hbm_bytes,
+    mla_decode_hbm_bytes,
+)
 from repro.roofline.extract import (
     HBM_BW,
     LINK_BW,
@@ -17,7 +21,9 @@ __all__ = [
     "active_params",
     "collective_bytes_from_hlo",
     "cost_summary",
+    "gqa_decode_hbm_bytes",
     "memory_summary",
+    "mla_decode_hbm_bytes",
     "model_flops",
     "roofline_terms",
 ]

@@ -1,0 +1,65 @@
+"""Analytic HBM-traffic model for one decode-step of attention.
+
+Decode attention is memory-bound: one query token, a long KV cache, and
+arithmetic intensity of ~1 FLOP/byte — so per-step latency is traffic /
+HBM_BW, and a kernel's merit is how close its traffic sits to the floor
+of reading the cache exactly once. These terms price both paths:
+
+``naive``  — the unfused XLA decode the models fall back to: the (H, L)
+  score tensor round-trips HBM between the QK matmul, the softmax, and
+  the PV matmul (write S, read S, write P, read P — f32), on top of the
+  cache read. For MLA the absorbed latent cache is read TWICE (once for
+  scores, once as V).
+
+``fused``  — the split-KV Pallas kernels (``flash_decode`` /
+  ``mla_decode``): the cache is read once, scores live in VMEM only,
+  and the extra traffic is the per-partition partials (o_part + lse,
+  written once by the kernel, read once by the LSE combine).
+
+Both include the q/output vectors, which are negligible at any real L.
+The functions are pure arithmetic (no jax) so benchmarks and tests can
+call them without a device; ``roofline_terms`` turns bytes into seconds.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+F32 = 4
+
+
+def gqa_decode_hbm_bytes(*, B: int, H: int, Hkv: int, hd: int, L: int,
+                         splits: int = 8, dtype_bytes: int = 2) -> Dict:
+    """One GQA decode step: q (B,H,hd) against a (B,Hkv,L,hd) K/V cache."""
+    kv = 2 * B * Hkv * L * hd * dtype_bytes          # read K and V once
+    qo = 2 * B * H * hd * dtype_bytes                # q in, out vector out
+    scores_rt = 4 * B * H * L * F32                  # S w+r, P w+r (naive)
+    partials = splits * B * H * (hd + 1) * F32 * 2   # o_part+lse, w then r
+    naive = kv + qo + scores_rt
+    fused = kv + qo + partials
+    return {
+        "naive_bytes": float(naive),
+        "fused_bytes": float(fused),
+        "floor_bytes": float(kv + qo),               # cache-once lower bound
+        "reduction_x": naive / fused,
+        "flops": 4.0 * B * H * L * hd,               # QK^T + PV
+    }
+
+
+def mla_decode_hbm_bytes(*, B: int, H: int, r: int, rd: int, L: int,
+                         splits: int = 8, dtype_bytes: int = 2) -> Dict:
+    """One absorbed-MLA decode step: q_lat (B,H,r) + q_pe (B,H,rd)
+    against the latent cache ckv (B,L,r) + kpe (B,L,rd)."""
+    ckv = B * L * r * dtype_bytes
+    kpe = B * L * rd * dtype_bytes
+    qo = 2 * B * H * (r + rd) * F32                  # absorbed q in, latent out
+    scores_rt = 4 * B * H * L * F32                  # S w+r, P w+r (naive)
+    partials = splits * B * H * (r + 1) * F32 * 2    # o_part+lse, w then r
+    naive = 2 * ckv + kpe + qo + scores_rt           # ckv read for S and as V
+    fused = ckv + kpe + qo + partials                # single latent-cache pass
+    return {
+        "naive_bytes": float(naive),
+        "fused_bytes": float(fused),
+        "floor_bytes": float(ckv + kpe + qo),
+        "reduction_x": naive / fused,
+        "flops": 2.0 * B * H * L * (r + rd) + 2.0 * B * H * L * r,
+    }

@@ -16,7 +16,10 @@ EXPECT = {
     "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
     "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
     "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
-    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+    # kv = 64: Kimi K2 is DeepSeek-V3-style MLA (latent cache, not GQA),
+    # one decompressed KV head per query head — PR 7's decode-kernel work
+    # aligned the config with the released architecture
+    "kimi-k2-1t-a32b": (61, 7168, 64, 64, 2048, 163840),
 }
 
 
@@ -46,6 +49,8 @@ def test_moe_details():
     assert ds.attention == "mla" and ds.mla.kv_lora_rank == 512
     kimi = get_config("kimi-k2-1t-a32b")
     assert kimi.moe.num_experts == 384 and kimi.moe.top_k == 8
+    assert kimi.attention == "mla" and kimi.mla.kv_lora_rank == 512
+    assert kimi.mla.qk_rope_head_dim == 64
 
 
 def test_hybrid_details():
