@@ -18,6 +18,13 @@ at the largest shard count the full elastic control plane must show a
 lower SLO violation rate AND a lower billed cost than every static
 placement. ``benchmarks/check_regression.py`` diffs fresh runs against
 the committed baseline.
+
+After the sweep, one dedicated telemetry-instrumented run of the
+headline configuration (largest shard count, full elastic control
+plane) prints the SLO-attainment time-series report and drops
+``artifacts/obs/run.trace.json`` (Chrome-trace — open at
+https://ui.perfetto.dev) plus ``artifacts/obs/run.jsonl`` (timelines +
+metric windows + elastic-decision audit log).
 """
 from __future__ import annotations
 
@@ -88,6 +95,37 @@ def run_point(shards: int, placement: str, elastic: Optional[ElasticConfig],
             for k in slot:
                 slot[k] += row.get(k, 0.0) / seeds
     return {"by_tenant": acc, "total": total}
+
+
+OBS_DIR = os.environ.get("REPRO_OBS_OUT", "artifacts/obs")
+
+
+def export_telemetry(shards: int, *, minutes: int, seed: int = 0,
+                     policy: str = "prompttuner") -> Dict[str, float]:
+    """One instrumented run of the headline configuration: print the
+    SLO-attainment report, export Chrome-trace + JSONL (with the audit
+    log), and return the headline counters."""
+    from repro.obs import Telemetry, validate_chrome_trace_file
+
+    mix = generate_tenant_mix(TENANTS, minutes=minutes, seed=seed)
+    fab = ClusterFabric(SimConfig(max_gpus=GPUS), policy, shards=shards,
+                        placement=PLACEMENTS[0],
+                        elastic=elastic_config(quota=True))
+    tel = Telemetry().attach(fab)
+    fab.run(clone_jobs(mix))
+
+    print()
+    print(tel.report(title=f"SLO attainment over time "
+                           f"[shards={shards}/elastic, seed={seed}]"))
+    os.makedirs(OBS_DIR, exist_ok=True)
+    trace = tel.export_chrome_trace(os.path.join(OBS_DIR, "run.trace.json"))
+    jsonl = tel.export_jsonl(os.path.join(OBS_DIR, "run.jsonl"))
+    problems = validate_chrome_trace_file(trace)
+    ok = "OK" if not problems else f"INVALID: {problems[:3]}"
+    print(f"\nchrome trace -> {trace} ({ok}; open at "
+          f"https://ui.perfetto.dev)\njsonl export -> {jsonl} "
+          f"({len(tel.audit.entries)} audit entries)")
+    return tel.summary_counters()
 
 
 def run(quick: bool = False) -> Dict:
@@ -161,6 +199,8 @@ def run(quick: bool = False) -> Dict:
           + ", ".join(f"{p} {s['slo_violation_pct']:.1f}%/"
                       f"${s['cost_usd']:.2f}" for p, s in statics.items())
           + f" -> {word}")
+
+    out["telemetry"] = export_telemetry(top, minutes=minutes)
 
     save_result("multitenant", out)
     # The repo-root copy is the committed baseline check_regression

@@ -15,9 +15,11 @@ violation rate and billed cost) and the config keys that must match for
 the runs to be comparable (``"config_keys"``; mismatched sweep configs
 skip the diff instead of flagging). A point regresses when the fresh
 value exceeds the baseline by more than ``threshold`` (relative, with a
-small absolute floor so near-zero baselines don't flag on noise). Exits
-non-zero when any pair regresses — CI runs this as a non-blocking job,
-so a red diff flags the PR without failing the build.
+small absolute floor so near-zero baselines don't flag on noise). Every
+comparable pair also prints a per-metric delta table (mean over shared
+points + worst single-point move) so a within-threshold run still shows
+its drift. Exits non-zero when any pair regresses — CI runs this as a
+non-blocking job, so a red diff flags the PR without failing the build.
 """
 from __future__ import annotations
 
@@ -58,6 +60,36 @@ def compare(baseline: Dict, fresh: Dict, threshold: float,
     return regressions
 
 
+def delta_table(baseline: Dict, fresh: Dict,
+                metrics: Sequence[str]) -> List[str]:
+    """One line per gated metric — mean baseline vs fresh over the
+    shared points plus the worst single-point move — printed on every
+    diff, regressing or not, so a passing run still shows its drift."""
+    base_pts = _points(baseline)
+    fresh_pts = _points(fresh)
+    shared = sorted(set(base_pts) & set(fresh_pts))
+    lines = [f"  {'metric':18s} {'base(mean)':>10s} {'fresh(mean)':>11s} "
+             f"{'delta':>7s}  worst point"]
+    for metric in metrics:
+        pairs = [(base_pts[n].get(metric), fresh_pts[n].get(metric), n)
+                 for n in shared]
+        pairs = [(b, f, n) for b, f, n in pairs
+                 if b is not None and f is not None]
+        if not pairs:
+            lines.append(f"  {metric:18s} {'-':>10s} {'-':>11s} {'-':>7s}  "
+                         "(no shared points)")
+            continue
+        mb = sum(b for b, _, _ in pairs) / len(pairs)
+        mf = sum(f for _, f, _ in pairs) / len(pairs)
+        rel = (mf - mb) / max(abs(mb), 1e-9)
+        wb, wf, wn = max(pairs, key=lambda p: (p[1] - p[0])
+                         / max(abs(p[0]), 1e-9))
+        wrel = (wf - wb) / max(abs(wb), 1e-9)
+        lines.append(f"  {metric:18s} {mb:10.4g} {mf:11.4g} {rel:+7.1%}  "
+                     f"{wn} ({wb:.4g} -> {wf:.4g}, {wrel:+.1%})")
+    return lines
+
+
 def check_pair(baseline_path: str, fresh_path: str,
                threshold: float) -> int:
     """Diff one baseline:fresh pair; returns 1 on regression else 0."""
@@ -88,6 +120,8 @@ def check_pair(baseline_path: str, fresh_path: str,
     metrics = tuple(baseline.get("metrics", DEFAULT_METRICS))
     regressions = compare(baseline, fresh, threshold, metrics)
     shared = len(set(_points(baseline)) & set(_points(fresh)))
+    for line in delta_table(baseline, fresh, metrics):
+        print(line)
     if not regressions:
         print(f"[{tag}] OK: no >{threshold:.0%} regressions across "
               f"{shared} shared points ({', '.join(metrics)})")

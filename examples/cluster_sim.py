@@ -5,6 +5,8 @@ every registered scheduling policy; report SLO violations + cost.
     PYTHONPATH=src python examples/cluster_sim.py --tenants --shards 4
     PYTHONPATH=src python examples/cluster_sim.py --bursty --shards 8 \
         --elastic --cap-best-effort 10 --policies prompttuner
+    PYTHONPATH=src python examples/cluster_sim.py --shards 2 --elastic \
+        --bursty --trace-out run.trace.json --metrics-out run.jsonl
 
 Policies come from the string-keyed registry — adding a new system is
 one class in ``repro/cluster/policies/`` and it shows up here for free.
@@ -12,6 +14,11 @@ With ``--shards N`` each policy runs over an N-shard ClusterFabric
 (``--placement`` picks the shard-placement strategy); ``--tenants``
 switches to the 3-tenant premium/standard/best-effort mix and prints the
 per-tenant breakdown.
+
+``--trace-out`` / ``--metrics-out`` attach the telemetry plane to each
+policy's run, print the SLO-attainment time-series report, and export a
+Chrome-trace (open at https://ui.perfetto.dev) / structured JSONL for
+the *last* policy listed (use ``--policies prompttuner`` to pick one).
 """
 import argparse
 import sys
@@ -61,7 +68,14 @@ def main():
                          "best-effort tenant (admission control)")
     ap.add_argument("--policies", nargs="*", default=policies.available(),
                     help=f"subset of {policies.available()}")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record telemetry and write a Chrome-trace/"
+                         "Perfetto JSON (e.g. run.trace.json)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="record telemetry and write the structured JSONL "
+                         "export (timelines + metric windows + audit)")
     args = ap.parse_args()
+    observe = args.trace_out is not None or args.metrics_out is not None
 
     elastic = None
     if args.elastic:
@@ -87,10 +101,14 @@ def main():
           f"{args.placement})\n")
     print(f"{'policy':14s} {'SLO viol %':>10s} {'cost $':>8s} "
           f"{'GPU-hours':>10s}")
+    tel = None
     for name in args.policies:
         fab = ClusterFabric(SimConfig(max_gpus=args.gpus), name,
                             shards=args.shards, placement=args.placement,
                             elastic=elastic)
+        if observe:
+            from repro.obs import Telemetry
+            tel = Telemetry().attach(fab)
         res = fab.run(clone_jobs(jobs))
         s = res.summary()
         extra = ""
@@ -105,6 +123,17 @@ def main():
                 print(f"  · {tenant:12s} {row['slo_violation_pct']:10.1f} "
                       f"{row['cost_usd']:8.2f} "
                       f"{row['gpu_seconds'] / 3600:10.1f}")
+        if tel is not None:
+            print()
+            print(tel.report(title=f"SLO attainment over time [{name}]"))
+            print()
+    if tel is not None:
+        # exports carry the last policy's run
+        if args.trace_out:
+            print(f"chrome trace -> {tel.export_chrome_trace(args.trace_out)}"
+                  "  (open at https://ui.perfetto.dev)")
+        if args.metrics_out:
+            print(f"jsonl export -> {tel.export_jsonl(args.metrics_out)}")
     print("\n(prompttuner = warm/cold pools + Algorithms 1&2 + "
           "DelaySchedulable + Prompt Bank latency budget; per-tenant "
           "rows bill at the class price tier)")

@@ -15,6 +15,9 @@ The service ties the paper's pieces into one API (§4):
 5. Submit a follow-up request carrying the freshly tuned prompt: when
    its job finishes, the service inserts it into the bank (Fig 5b's
    online loop), so later similar requests start from it.
+6. ``telemetry=True`` wires the fleet telemetry plane into the same
+   front door: per-job lifecycle spans (``handle.timeline()``) and the
+   SLO-attainment time-series report.
 """
 import sys
 import time
@@ -65,7 +68,8 @@ def main():
         return make_score_fn(pre, tasks_by_id[req.task_id], tune_cfg)
 
     service = PromptTunerService(SimConfig(max_gpus=8), bank=holdout,
-                                 score_fn_factory=score_factory)
+                                 score_fn_factory=score_factory,
+                                 telemetry=True)
 
     print("== 3. submit: latency budget -> two-layer lookup (Eqn-1)")
     t0 = time.time()
@@ -119,6 +123,13 @@ def main():
           f"bank {size0} -> {len(holdout)} entries "
           f"({len(done)} fresh prompt inserted online)")
     print(f"   service summary: {service.summary()}")
+
+    print("== 6. telemetry: per-job spans + SLO-attainment report")
+    tl = handle.timeline()
+    phases = ", ".join(f"{s.phase}={s.duration:.1f}s" for s in tl.spans
+                       if s.end is not None)
+    print(f"   job {tl.job_id} on shard {tl.shard}: {phases}")
+    print(service.report(title="SLO attainment over time (quickstart)"))
 
 
 if __name__ == "__main__":

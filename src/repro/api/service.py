@@ -36,7 +36,7 @@ bank itself stays agnostic to how scores are produced.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Set
+from typing import Callable, Dict, List, Optional, Set, Union
 
 import numpy as np
 
@@ -57,6 +57,7 @@ from repro.core.jobs import (
     SLOClass,
 )
 from repro.core.prompt_bank import PromptBank, PromptEntry
+from repro.obs import Telemetry
 
 from repro.api.types import JobHandle, JobResult, SubmitRequest
 
@@ -69,7 +70,13 @@ class PromptTunerService:
     the same front door for free. Pass a pre-built ``fabric`` to serve
     from several shards, or ``shards=``/``placement=`` to have the
     service build one; the default is a single-shard fabric, which is
-    float-for-float identical to the pre-fabric engine."""
+    float-for-float identical to the pre-fabric engine.
+
+    ``telemetry=True`` (or an un-attached :class:`repro.obs.Telemetry`)
+    wires the fleet telemetry plane into the fabric: handles gain
+    ``.timeline()``, and ``service.telemetry`` exposes the metrics
+    registry, audit log, ``report()`` and trace exports. Recording rides
+    the event stream only, so results are identical with it on or off."""
 
     def __init__(
         self,
@@ -82,6 +89,7 @@ class PromptTunerService:
         shards: Optional[int] = None,
         placement: Optional[str] = None,
         elastic: Optional[ElasticConfig] = None,
+        telemetry: Optional[Union[bool, Telemetry]] = None,
     ):
         if fabric is not None:
             conflicting = [name for name, given in [
@@ -101,6 +109,17 @@ class PromptTunerService:
             self.fabric = ClusterFabric(
                 self.cfg, self.policy_name, shards=shards or 1,
                 placement=placement or "llm-affinity", elastic=elastic)
+        if telemetry is None or telemetry is False:
+            self.telemetry: Optional[Telemetry] = None
+        else:
+            self.telemetry = (Telemetry() if telemetry is True
+                              else telemetry)
+            if not self.telemetry.attached:
+                self.telemetry.attach(self.fabric)
+            elif self.telemetry._fabric is not self.fabric:
+                raise ValueError(
+                    "telemetry= is already attached to a different fabric; "
+                    "use one Telemetry per fabric")
         self.bank = bank
         self.score_fn_factory = score_fn_factory
         self._handles: Dict[int, JobHandle] = {}
@@ -192,6 +211,7 @@ class PromptTunerService:
             initial_prompt=init_prompt,
             rejected=rejected,
             reject_reason=reason,
+            telemetry=self.telemetry,
         )
         if not rejected:
             self._handles[job_id] = handle
@@ -272,3 +292,11 @@ class PromptTunerService:
         """Per-tenant jobs / SLO violations / billed cost / GPU-seconds
         over everything run so far."""
         return self.sim_result().summary_by_tenant()
+
+    def report(self, **kw) -> str:
+        """The telemetry plane's SLO-attainment / queue-depth time-series
+        report (requires ``telemetry=``)."""
+        if self.telemetry is None:
+            raise ValueError("no telemetry recorded: construct the service "
+                             "with telemetry=True (or a Telemetry instance)")
+        return self.telemetry.report(**kw)

@@ -1,7 +1,7 @@
 """Typed request/handle/result surface of the PromptTuner service."""
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Union
 
 import numpy as np
@@ -69,6 +69,21 @@ class JobHandle:
     initial_prompt: Optional[np.ndarray] = None  # the prompt itself, for tuning
     rejected: bool = False             # tenant quota bounced this submission
     reject_reason: Optional[str] = None
+    # Attached by a telemetry-enabled service (repro.obs.Telemetry);
+    # identity-only plumbing, excluded from equality/repr.
+    telemetry: Optional[object] = field(default=None, repr=False,
+                                        compare=False)
+
+    def timeline(self):
+        """This job's recorded lifecycle spans
+        (:class:`~repro.obs.spans.JobTimeline`), available when the
+        service was built with ``telemetry=``. Grows as events fold in;
+        complete after ``run_until_idle``."""
+        if self.telemetry is None:
+            raise ValueError(
+                "no telemetry recorded for this job: construct the service "
+                "with telemetry=True (or a repro.obs.Telemetry instance)")
+        return self.telemetry.timeline.timeline(self.job_id)
 
 
 @dataclass(frozen=True)

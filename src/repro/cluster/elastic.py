@@ -114,6 +114,11 @@ class ElasticController:
         self.steals = 0                   # lifetime counters (introspection)
         self.resizes = 0
         self.rejections = 0
+        # Optional decision sink (duck-typed as repro.obs.audit.AuditLog):
+        # when attached — Telemetry.attach does it — every steal / resize
+        # / rejection / reclaim records the ShardHealth inputs it acted
+        # on, so control actions stay attributable to recorded signals.
+        self.audit = None
         self._next_cycle_at = 0.0
         self._hot_streak: Dict[int, int] = {}
         self._last_resize: Dict[int, float] = {}
@@ -204,7 +209,7 @@ class ElasticController:
         healths = fleet_health(self.fabric.shards)
         # Reclaim first: idle warm GPUs return to cold early (billing
         # stops), making low-pressure shards better donors below.
-        self._reclaim_idle(healths)
+        self._reclaim_idle(t, healths)
         # Autoscale first, on the undisturbed pressure snapshot: moving
         # cold capacity toward saturated shards keeps their warm pools
         # consolidated (cheap). Stealing then spreads only the overflow
@@ -219,7 +224,7 @@ class ElasticController:
 
     # -- mechanism 0: early fleet-wide idle reclaim ----------------------------
 
-    def _reclaim_idle(self, healths: List[ShardHealth]) -> None:
+    def _reclaim_idle(self, t: float, healths: List[ShardHealth]) -> None:
         """Billing control: warm GPUs idle for more than
         ``idle_reclaim_after`` seconds return to the (unbilled) cold
         pool now, on every shard, instead of waiting out the policy's
@@ -232,7 +237,13 @@ class ElasticController:
             return
         for h in healths:
             if h.warm_idle > 0:
-                self.fabric.shards[h.shard].view.mature_and_reclaim(window)
+                n = self.fabric.shards[h.shard].view.mature_and_reclaim(
+                    window)
+                if n > 0 and self.audit is not None:
+                    self.audit.decision(
+                        time=t, action="idle_reclaim", shard=h.shard,
+                        detail=f"{n} warm GPUs idle > {window:g}s -> cold",
+                        inputs={"shard": h})
 
     # -- mechanism 1: cross-shard work stealing --------------------------------
 
@@ -257,6 +268,7 @@ class ElasticController:
 
     def _steal_cycle(self, t: float, healths: List[ShardHealth]) -> None:
         shards = self.fabric.shards
+        by_shard = {h.shard: h for h in healths}
         free = {h.shard: h.free_capacity for h in healths}
         moves = 0
         for h in sorted(healths, key=lambda x: x.pressure, reverse=True):
@@ -307,6 +319,12 @@ class ElasticController:
                         self._migrations.get(job.job_id, 0) + 1)
                     moves += 1
                     self.steals += 1
+                    if self.audit is not None:
+                        self.audit.decision(
+                            time=t, action=JOB_STOLEN, shard=best,
+                            job_id=job.job_id, tenant=job.tenant,
+                            detail=f"shard {src} -> {best}",
+                            inputs={"src": h, "dst": by_shard[best]})
 
     # -- mechanism 2: queue-pressure autoscaling -------------------------------
 
@@ -359,8 +377,26 @@ class ElasticController:
                 if moved <= 0:
                     spare[d.shard] = 0
                     continue
-                self.fabric.resize_shard(
-                    r.shard, shards[r.shard].cfg.max_gpus + moved, at=t)
+                r_before = shards[r.shard].cfg.max_gpus
+                r_after = self.fabric.resize_shard(r.shard, r_before + moved,
+                                                   at=t)
+                if self.audit is not None:
+                    # one audit entry per emitted SHARD_RESIZED event,
+                    # each carrying the pre-decision health snapshots
+                    self.audit.decision(
+                        time=t, action=SHARD_RESIZED, shard=d.shard,
+                        detail=(f"{before} -> {after} GPUs (donor; "
+                                f"pressure {d.pressure:.2f} < "
+                                f"{cfg.pressure_low:g})"),
+                        inputs={"shard": d, "receiver": r})
+                    self.audit.decision(
+                        time=t, action=SHARD_RESIZED, shard=r.shard,
+                        detail=(f"{r_before} -> {r_after} GPUs (receiver; "
+                                f"pressure {r.pressure:.2f} > "
+                                f"{cfg.pressure_high:g} for "
+                                f"{self._hot_streak.get(r.shard, 0)} "
+                                f"cycles)"),
+                        inputs={"shard": r, "donor": d})
                 spare[d.shard] -= moved
                 want -= moved
                 self.resizes += 1

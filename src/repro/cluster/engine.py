@@ -593,7 +593,11 @@ class ClusterEngine:
         rounds. Growth adds cold (free, unbilled) GPUs; shrinkage can
         only take cold GPUs — warm and busy capacity is never revoked,
         so ledgers and running jobs are untouched. Returns the actual
-        new capacity (a shrink is clamped to the free cold pool)."""
+        new capacity (a shrink is clamped to the free cold pool). A
+        negative target is a caller bug, rejected loudly."""
+        if new_max_gpus < 0:
+            raise ValueError(
+                f"resize target must be >= 0 GPUs, got {new_max_gpus}")
         delta = new_max_gpus - self.cfg.max_gpus
         if delta >= 0:
             self.cold_free += delta

@@ -47,6 +47,7 @@ from repro.cluster.engine import (
     SimConfig,
     SimResult,
 )
+from repro.cluster.health import fleet_health
 from repro.core.jobs import Job
 
 PlacementFn = Callable[[Job, Sequence[ClusterEngine]], int]
@@ -220,6 +221,12 @@ class ClusterFabric:
             if reason is not None:
                 self.rejections.append((job, reason))
                 self.controller.rejections += 1
+                if self.controller.audit is not None:
+                    self.controller.audit.decision(
+                        time=self.now, action=JOB_REJECTED, shard=-1,
+                        job_id=job.job_id, tenant=job.tenant, detail=reason,
+                        inputs={f"shard{h.shard}": h
+                                for h in fleet_health(self.shards)})
                 self._dispatch(EngineEvent(
                     kind=JOB_REJECTED, time=self.now, job=job, shard=-1,
                     detail=reason))
@@ -229,9 +236,20 @@ class ClusterFabric:
                     if e.cfg.max_gpus >= need]
         if eligible and len(eligible) < len(self.shards):
             sub = [self.shards[i] for i in eligible]
-            i = eligible[self._place(job, sub)]
+            k = self._place(job, sub)
+            if not 0 <= k < len(sub):
+                raise ValueError(
+                    f"placement {self.placement_name!r} returned shard "
+                    f"index {k} for job {job.job_id}, valid range is "
+                    f"0..{len(sub) - 1}")
+            i = eligible[k]
         else:
             i = self._place(job, self.shards)
+            if not 0 <= i < len(self.shards):
+                raise ValueError(
+                    f"placement {self.placement_name!r} returned shard "
+                    f"index {i} for job {job.job_id}, valid range is "
+                    f"0..{len(self.shards) - 1}")
         self.placed[job.job_id] = i
         self.shards[i].submit(job)
         return i
@@ -294,10 +312,11 @@ class ClusterFabric:
         Shrinks only take free cold GPUs — warm pools, running jobs, and
         ledgers are untouched — so the returned actual capacity may be
         larger than requested. Emits a ``shard_resized`` event when the
-        capacity changed. The fleet total is the caller's to conserve."""
+        capacity changed. The fleet total is the caller's to conserve.
+        A negative target raises ``ValueError`` (engine contract)."""
         eng = self.shards[i]
         before = eng.cfg.max_gpus
-        after = eng.resize(max(new_max_gpus, 0))
+        after = eng.resize(new_max_gpus)
         if after != before:
             self._dispatch(EngineEvent(
                 kind=SHARD_RESIZED, time=self.now if at is None else at,

@@ -1,0 +1,11 @@
+"""CLI entry: ``python -m repro.obs --validate run.trace.json``.
+
+Delegates to :func:`repro.obs.export.main` (also reachable as
+``python -m repro.obs.export``, modulo a harmless runpy warning).
+"""
+import sys
+
+from repro.obs.export import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -312,6 +312,69 @@ def test_shared_pool_row_absorbs_idle_billing():
         res.gpu_seconds)
 
 
+def test_out_of_range_placement_raises_value_error():
+    """A buggy placement returning an out-of-range shard index must be
+    a clear ValueError naming the culprit, not a downstream IndexError."""
+    from repro.cluster.fabric import _PLACEMENTS, register_placement
+
+    @register_placement("off-the-end")
+    def _off_the_end(job, shards):
+        return len(shards)
+
+    try:
+        fab = ClusterFabric(SimConfig(max_gpus=8), "fifo", shards=2,
+                            placement="off-the-end")
+        job = Job(job_id=0, llm="gpt2-base", submit_time=0.0, slo=600.0,
+                  iters_manual=100, iters_bank=50)
+        with pytest.raises(ValueError, match=r"'off-the-end' returned "
+                                             r"shard index 2.*0\.\.1"):
+            fab.submit(job)
+    finally:
+        del _PLACEMENTS["off-the-end"]
+
+
+def test_negative_resize_raises_value_error():
+    """engine.resize(-k) is a caller bug, rejected loudly — and the
+    fabric passes the target through instead of clamping it silently."""
+    eng = policies.build("prompttuner", SimConfig(max_gpus=8))
+    with pytest.raises(ValueError, match=">= 0 GPUs, got -1"):
+        eng.resize(-1)
+    assert eng.cfg.max_gpus == 8                    # state untouched
+    fab = ClusterFabric(SimConfig(max_gpus=8), "prompttuner", shards=2)
+    with pytest.raises(ValueError, match=">= 0 GPUs, got -3"):
+        fab.resize_shard(0, -3)
+    assert fab.shards[0].cfg.max_gpus == 4
+
+
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       shards=st.integers(min_value=1, max_value=4),
+       elastic_on=st.sampled_from([False, True]))
+def test_stream_property_ordered_and_one_done_per_job(seed, shards,
+                                                      elastic_on):
+    """Property: for any seed / shard count / elastic toggle, the fabric
+    event stream is non-decreasing in sim time and every completed job
+    gets exactly one JOB_DONE — even when elastic steals rehome jobs."""
+    from repro.cluster import ElasticConfig
+    jobs = generate_trace(TraceConfig(load="low", seed=seed, minutes=2))
+    fab = ClusterFabric(SimConfig(max_gpus=16), "prompttuner",
+                        shards=shards,
+                        elastic=ElasticConfig() if elastic_on else None)
+    events = []
+    fab.on_event(events.append)
+    res = fab.run(clone_jobs(jobs))
+    times = [e.time for e in events]
+    assert times == sorted(times)
+    done_ids = [e.job.job_id for e in events if e.kind == JOB_DONE]
+    assert len(done_ids) == len(set(done_ids))
+    completed = sorted(r.job.job_id for r in res.records
+                       if np.isfinite(r.finish))
+    assert sorted(done_ids) == completed
+
+
 def test_event_kinds_are_closed_set():
     """WARM_READY is gone: the engine emits exactly the three documented
     event kinds."""
