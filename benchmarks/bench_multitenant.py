@@ -19,6 +19,23 @@ lower SLO violation rate AND a lower billed cost than every static
 placement. ``benchmarks/check_regression.py`` diffs fresh runs against
 the committed baseline.
 
+After the fault-free sweep, a **chaos sweep** re-runs the top shard
+count under the three hazard profiles from
+``repro.cluster.faults.CHAOS_PROFILES`` (crashes / preemptions /
+mixed), comparing three recovery postures on the *same* seeded fault
+schedule:
+
+* ``static+faults`` — static placement, no control plane: orphans are
+  retried from zero iterations, nobody drains or sheds;
+* ``elastic-restart`` — the elastic control plane with every
+  failure-awareness knob off and no checkpoints (restart-from-zero);
+* ``elastic-aware`` — checkpoint/restore on (30 s interval, jobs with
+  under 180 s of tuning compute exempt from the write tax) plus
+  drain-on-warning, flap quarantine and best-effort load shedding.
+
+The chaos verdict requires ``elastic-aware`` to beat
+``elastic-restart`` on SLO violation rate AND billed cost per profile.
+
 After the sweep, one dedicated telemetry-instrumented run of the
 headline configuration (largest shard count, full elastic control
 plane) prints the SLO-attainment time-series report and drops
@@ -28,6 +45,7 @@ metric windows + elastic-decision audit log).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import time
@@ -36,8 +54,10 @@ from typing import Dict, Optional
 from benchmarks.common import fmt, save_result, table
 from repro.cluster import (
     BURSTY_TENANT_MIX,
+    CHAOS_PROFILES,
     ClusterFabric,
     ElasticConfig,
+    FaultPlane,
     SimConfig,
     TenantQuota,
     clone_jobs,
@@ -97,6 +117,70 @@ def run_point(shards: int, placement: str, elastic: Optional[ElasticConfig],
     return {"by_tenant": acc, "total": total}
 
 
+# -- chaos sweep -------------------------------------------------------------
+
+BASE_SEED = 0                 # trace + fault-schedule base seed (seed sd
+                              # of a point uses BASE_SEED + sd)
+CHAOS_CHECKPOINT_S = 30.0     # aware mode's checkpoint interval
+# Jobs with under this much tuning compute never snapshot: the write
+# tax is paid up front by every job while the resume credit only pays
+# out for the few that die mid-flight, so checkpointing short jobs is
+# negative expected value (measured: it alone flips the chaos verdict).
+CHAOS_CHECKPOINT_MIN_S = 180.0
+CHAOS_MODES = ("static+faults", "elastic-restart", "elastic-aware")
+
+
+def chaos_setup(mode: str):
+    """(elastic config, engine checkpoint kwargs) for one recovery
+    posture. No quotas anywhere so every mode admits the identical
+    workload."""
+    if mode == "static+faults":
+        return None, {}
+    if mode == "elastic-restart":
+        return ElasticConfig(drain_on_warning=False,
+                             quarantine_enabled=False,
+                             shed_enabled=False), {}
+    if mode == "elastic-aware":
+        return ElasticConfig(), {
+            "checkpoint_interval_s": CHAOS_CHECKPOINT_S,
+            "checkpoint_min_compute_s": CHAOS_CHECKPOINT_MIN_S,
+        }
+    raise ValueError(f"unknown chaos mode {mode!r}")
+
+
+def run_chaos_point(shards: int, profile: str, mode: str, *,
+                    minutes: int, seeds: int,
+                    policy: str = "prompttuner") -> Dict[str, Dict]:
+    total: Dict[str, float] = {
+        "slo_violation_pct": 0.0, "cost_usd": 0.0, "gpu_seconds": 0.0,
+        "makespan_s": 0.0, "jobs": 0.0, "wall_clock_s": 0.0,
+        "crashes": 0.0, "preemptions": 0.0, "retries": 0.0,
+        "sheds": 0.0, "recoveries": 0.0,
+    }
+    for sd in range(seeds):
+        seed = BASE_SEED + sd
+        mix = generate_tenant_mix(TENANTS, minutes=minutes, seed=seed)
+        ecfg, ckpt_kw = chaos_setup(mode)
+        # fresh plane per run, same seed: every mode faces the identical
+        # fault schedule, so the comparison isolates the recovery policy
+        faults = FaultPlane(hazard=CHAOS_PROFILES[profile], seed=seed)
+        fab = ClusterFabric(
+            SimConfig(max_gpus=GPUS, **ckpt_kw), policy,
+            shards=shards, placement=PLACEMENTS[0], elastic=ecfg,
+            faults=faults)
+        t0 = time.perf_counter()
+        res = fab.run(clone_jobs(mix))
+        total["wall_clock_s"] += (time.perf_counter() - t0) / seeds
+        s = res.summary()
+        for k in ("slo_violation_pct", "cost_usd", "gpu_seconds",
+                  "makespan_s", "jobs"):
+            total[k] += s.get(k, 0.0) / seeds
+        for k in ("crashes", "preemptions", "retries", "sheds",
+                  "recoveries"):
+            total[k] += getattr(faults, k) / seeds
+    return {"total": total}
+
+
 OBS_DIR = os.environ.get("REPRO_OBS_OUT", "artifacts/obs")
 
 
@@ -132,16 +216,28 @@ def run(quick: bool = False) -> Dict:
     minutes = 10 if quick else 20
     seeds = 1 if quick else 2
     shard_counts = (1, 2, 8) if quick else SHARD_COUNTS
+    config = {
+        "gpus": GPUS, "minutes": minutes, "seeds": seeds,
+        "seed": BASE_SEED,
+        "best_effort_cap_usd": BEST_EFFORT_CAP_USD,
+        "chaos_profiles": sorted(CHAOS_PROFILES),
+        "chaos_checkpoint_s": CHAOS_CHECKPOINT_S,
+        "chaos_checkpoint_min_s": CHAOS_CHECKPOINT_MIN_S,
+        "tenants": {t.name: {"load": t.load, "scale": t.scale,
+                             "slo_class": str(t.slo_class),
+                             "spike_prob": t.spike_prob,
+                             "spike_mult": t.spike_mult}
+                    for t in TENANTS},
+    }
+    # Stable fingerprint of the sweep parameters: when baseline and
+    # fresh runs differ, check_regression names the diverging key(s) —
+    # seed and config_hash pin the RNG and the whole config shape.
+    config["config_hash"] = hashlib.sha256(
+        json.dumps(config, sort_keys=True, default=float).encode()
+    ).hexdigest()[:12]
     out: Dict[str, Dict] = {
-        "config": {
-            "gpus": GPUS, "minutes": minutes, "seeds": seeds,
-            "best_effort_cap_usd": BEST_EFFORT_CAP_USD,
-            "tenants": {t.name: {"load": t.load, "scale": t.scale,
-                                 "slo_class": str(t.slo_class),
-                                 "spike_prob": t.spike_prob,
-                                 "spike_mult": t.spike_mult}
-                        for t in TENANTS},
-        },
+        "config": config,
+        "config_keys": ["gpus", "minutes", "seeds", "seed", "config_hash"],
         "points": {},
     }
     rows = []
@@ -198,6 +294,64 @@ def run(quick: bool = False) -> Dict:
           f"{el['slo_violation_pct']:.1f}% / ${el['cost_usd']:.2f} vs "
           + ", ".join(f"{p} {s['slo_violation_pct']:.1f}%/"
                       f"${s['cost_usd']:.2f}" for p, s in statics.items())
+          + f" -> {word}")
+
+    # -- chaos sweep: recovery postures under seeded fault schedules ----------
+    chaos_rows = []
+    chaos_profiles = sorted(CHAOS_PROFILES)
+    for profile in chaos_profiles:
+        for mode in CHAOS_MODES:
+            point = run_chaos_point(top, profile, mode,
+                                    minutes=minutes, seeds=seeds)
+            out["points"][f"chaos/{profile}/shards{top}/{mode}"] = point
+            t = point["total"]
+            chaos_rows.append([
+                profile, mode,
+                fmt(t["slo_violation_pct"], 1), fmt(t["cost_usd"]),
+                fmt(t["makespan_s"], 0), fmt(t["wall_clock_s"], 1),
+                int(round(t["crashes"] + t["preemptions"])),
+                int(round(t["retries"])), int(round(t["sheds"])),
+            ])
+    print()
+    print(table(
+        f"Chaos sweep @ {top} shards - recovery postures under "
+        "identical fault schedules",
+        ["profile", "mode", "viol %", "cost $", "mkspan", "wall s",
+         "faults", "retries", "shed"], chaos_rows))
+
+    # -- chaos verdict: failure-aware elastic vs restart-from-zero ------------
+    per_profile = {}
+    aware_beats_restart = True
+    for profile in chaos_profiles:
+        restart = out["points"][
+            f"chaos/{profile}/shards{top}/elastic-restart"]["total"]
+        aware = out["points"][
+            f"chaos/{profile}/shards{top}/elastic-aware"]["total"]
+        wins = (aware["slo_violation_pct"] < restart["slo_violation_pct"]
+                and aware["cost_usd"] < restart["cost_usd"])
+        aware_beats_restart &= wins
+        per_profile[profile] = {
+            "aware": {k: aware[k] for k in ("slo_violation_pct",
+                                            "cost_usd")},
+            "restart": {k: restart[k] for k in ("slo_violation_pct",
+                                                "cost_usd")},
+            "aware_beats_restart": wins,
+        }
+    out["chaos_verdict"] = {
+        "at_shards": top,
+        "profiles": per_profile,
+        "aware_beats_restart_everywhere": aware_beats_restart,
+    }
+    word = ("failure-aware elastic beats restart-from-zero on every "
+            "profile" if aware_beats_restart
+            else "FAILURE-AWARE DOES NOT DOMINATE RESTART-FROM-ZERO")
+    print(f"\nchaos verdict @ {top} shards: "
+          + ", ".join(
+              f"{p} aware {v['aware']['slo_violation_pct']:.1f}%/"
+              f"${v['aware']['cost_usd']:.2f} vs restart "
+              f"{v['restart']['slo_violation_pct']:.1f}%/"
+              f"${v['restart']['cost_usd']:.2f}"
+              for p, v in per_profile.items())
           + f" -> {word}")
 
     out["telemetry"] = export_telemetry(top, minutes=minutes)

@@ -113,8 +113,10 @@ def check_pair(baseline_path: str, fresh_path: str,
     if any(base_cfg.get(k) != fresh_cfg.get(k) for k in cfg_keys):
         diffs = {k: (base_cfg.get(k), fresh_cfg.get(k)) for k in cfg_keys
                  if base_cfg.get(k) != fresh_cfg.get(k)}
-        print(f"[{tag}] baseline and fresh runs use different sweep "
-              f"configs ({diffs}); skipping the diff")
+        detail = "; ".join(f"{k}: baseline={b!r} fresh={f!r}"
+                           for k, (b, f) in sorted(diffs.items()))
+        print(f"[{tag}] sweep configs diverge on "
+              f"{', '.join(sorted(diffs))} ({detail}); skipping the diff")
         return 0
 
     metrics = tuple(baseline.get("metrics", DEFAULT_METRICS))

@@ -19,6 +19,12 @@ per-tenant breakdown.
 policy's run, print the SLO-attainment time-series report, and export a
 Chrome-trace (open at https://ui.perfetto.dev) / structured JSONL for
 the *last* policy listed (use ``--policies prompttuner`` to pick one).
+
+``--chaos {crashes,preemptions,mixed}`` arms the fault plane with the
+named hazard profile, seeded from ``--seed`` so the injected crash /
+preemption / slowdown schedule is reproducible (and identical across
+the policies being compared). ``--checkpoint SECONDS`` enables the
+crash-recovery checkpoint model.
 """
 import argparse
 import sys
@@ -28,9 +34,11 @@ sys.path.insert(0, "src")
 
 from repro.cluster import (
     BURSTY_TENANT_MIX,
+    CHAOS_PROFILES,
     ClusterFabric,
     DEFAULT_TENANT_MIX,
     ElasticConfig,
+    FaultPlane,
     SimConfig,
     TenantQuota,
     TraceConfig,
@@ -66,6 +74,16 @@ def main():
                     metavar="USD",
                     help="with --elastic: per-tenant cost cap on the "
                          "best-effort tenant (admission control)")
+    ap.add_argument("--chaos", default=None, choices=sorted(CHAOS_PROFILES),
+                    help="inject faults from the named hazard profile, "
+                         "seeded by --seed (same schedule per policy)")
+    ap.add_argument("--checkpoint", type=float, default=None, metavar="S",
+                    help="with --chaos: checkpoint interval in sim seconds "
+                         "(orphaned jobs resume from the last checkpoint)")
+    ap.add_argument("--checkpoint-min", type=float, default=0.0, metavar="S",
+                    help="with --checkpoint: jobs with less tuning compute "
+                         "than this never snapshot (skips the write tax "
+                         "where a resume credit can't plausibly pay off)")
     ap.add_argument("--policies", nargs="*", default=policies.available(),
                     help=f"subset of {policies.available()}")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -96,16 +114,24 @@ def main():
                                           slo_emergence=args.S,
                                           seed=args.seed))
         desc = f"load={args.load}, S={args.S}"
+    chaos_desc = (f", chaos={args.chaos}" if args.chaos is not None else "")
     print(f"trace: {len(jobs)} LPT jobs over 20 min ({desc}, "
           f"fleet={args.gpus} GPUs, shards={args.shards}/"
-          f"{args.placement})\n")
+          f"{args.placement}, seed={args.seed}{chaos_desc})\n")
     print(f"{'policy':14s} {'SLO viol %':>10s} {'cost $':>8s} "
           f"{'GPU-hours':>10s}")
     tel = None
     for name in args.policies:
-        fab = ClusterFabric(SimConfig(max_gpus=args.gpus), name,
+        cfg = SimConfig(max_gpus=args.gpus,
+                        checkpoint_interval_s=args.checkpoint,
+                        checkpoint_min_compute_s=args.checkpoint_min)
+        # fresh plane per policy: same seed => identical fault schedule
+        faults = (FaultPlane(hazard=CHAOS_PROFILES[args.chaos],
+                             seed=args.seed)
+                  if args.chaos is not None else None)
+        fab = ClusterFabric(cfg, name,
                             shards=args.shards, placement=args.placement,
-                            elastic=elastic)
+                            elastic=elastic, faults=faults)
         if observe:
             from repro.obs import Telemetry
             tel = Telemetry().attach(fab)
@@ -116,6 +142,10 @@ def main():
             extra = (f"   steals={fab.controller.steals} "
                      f"resizes={fab.controller.resizes} "
                      f"rejected={len(fab.rejections)}")
+        if faults is not None:
+            extra += (f"   crashes={faults.crashes} "
+                      f"preempts={faults.preemptions} "
+                      f"retries={faults.retries} shed={faults.sheds}")
         print(f"{name:14s} {s['slo_violation_pct']:10.1f} "
               f"{s['cost_usd']:8.2f} {s['gpu_seconds'] / 3600:10.1f}{extra}")
         if (args.tenants or args.bursty) and name == "prompttuner":

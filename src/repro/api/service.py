@@ -49,6 +49,7 @@ from repro.cluster.engine import (
 )
 from repro.cluster.elastic import ElasticConfig, TenantQuota
 from repro.cluster.fabric import ClusterFabric
+from repro.cluster.faults import FaultPlane
 from repro.core.jobs import (
     DEFAULT_SLO_CLASS,
     LLM_PROFILES,
@@ -89,17 +90,20 @@ class PromptTunerService:
         shards: Optional[int] = None,
         placement: Optional[str] = None,
         elastic: Optional[ElasticConfig] = None,
+        faults: Optional[FaultPlane] = None,
         telemetry: Optional[Union[bool, Telemetry]] = None,
     ):
         if fabric is not None:
             conflicting = [name for name, given in [
                 ("cfg", cfg), ("policy", policy), ("shards", shards),
                 ("placement", placement), ("elastic", elastic),
+                ("faults", faults),
             ] if given is not None]
             if conflicting:
                 raise ValueError(
                     f"pass either fabric= or {conflicting} — a pre-built "
-                    "fabric already fixes cfg/policy/shards/placement/elastic")
+                    "fabric already fixes cfg/policy/shards/placement/"
+                    "elastic/faults")
             self.fabric = fabric
             self.cfg = fabric.cfg
             self.policy_name = fabric.policy_name
@@ -108,7 +112,8 @@ class PromptTunerService:
             self.policy_name = policy or "prompttuner"
             self.fabric = ClusterFabric(
                 self.cfg, self.policy_name, shards=shards or 1,
-                placement=placement or "llm-affinity", elastic=elastic)
+                placement=placement or "llm-affinity", elastic=elastic,
+                faults=faults)
         if telemetry is None or telemetry is False:
             self.telemetry: Optional[Telemetry] = None
         else:
@@ -260,6 +265,7 @@ class PromptTunerService:
                 used_bank=rec.used_bank,
                 init_overhead=rec.init_overhead,
                 inserted_to_bank=inserted,
+                retries=rec.job.restarts,
             ))
         out.sort(key=lambda r: r.handle.job_id)
         return out

@@ -99,6 +99,7 @@ class JobResult:
     used_bank: bool
     init_overhead: float
     inserted_to_bank: bool             # Fig 5b online insertion happened
+    retries: int = 0                   # crash-recovery re-placements
 
     @property
     def completed(self) -> bool:

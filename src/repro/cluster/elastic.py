@@ -53,6 +53,13 @@ JOB_STOLEN = "job_stolen"          # a pending job migrated between shards
 JOB_REJECTED = "job_rejected"      # a submission bounced off a tenant quota
 SHARD_RESIZED = "shard_resized"    # autoscaler moved GPUs between shards
 
+# Failure-aware audit action tags. Drains ride the job_stolen fabric
+# event and sheds the job_shed event; quarantine is pure controller
+# state, so it exists only in the audit log.
+DRAIN = "drain"
+QUARANTINE = "quarantine"
+SHED = "job_shed"
+
 
 @dataclass(frozen=True)
 class TenantQuota:
@@ -89,6 +96,16 @@ class ElasticConfig:
     steal_only_salvageable: bool = True  # steal only when the destination
     #   can still meet the job's SLO (warmth-adjusted completion estimate)
     quotas: Dict[str, TenantQuota] = field(default_factory=dict)
+    # Failure awareness — all three act only when the fabric carries a
+    # FaultPlane (repro.cluster.faults); without one they are inert.
+    drain_on_warning: bool = True     # evacuate preemption-warned shards
+    quarantine_enabled: bool = True   # bench flapping shards
+    flap_threshold: int = 2           # failures within flap_window to trip
+    flap_window: float = 300.0        # s of failure history considered
+    quarantine_s: float = 120.0       # re-admission delay (extended while
+    #   the shard keeps failing: health-gated, not a fixed timer)
+    shed_enabled: bool = True         # degrade gracefully under capacity
+    #   loss: drop best-effort jobs that are doomed anyway
 
 
 def job_gpu_second_estimate(engine: ClusterEngine, job: Job) -> float:
@@ -114,6 +131,9 @@ class ElasticController:
         self.steals = 0                   # lifetime counters (introspection)
         self.resizes = 0
         self.rejections = 0
+        self.drains = 0                   # jobs evacuated off warned shards
+        self.quarantines = 0              # flapping shards benched
+        self.sheds = 0                    # doomed best-effort jobs dropped
         # Optional decision sink (duck-typed as repro.obs.audit.AuditLog):
         # when attached — Telemetry.attach does it — every steal / resize
         # / rejection / reclaim records the ShardHealth inputs it acted
@@ -123,6 +143,7 @@ class ElasticController:
         self._hot_streak: Dict[int, int] = {}
         self._last_resize: Dict[int, float] = {}
         self._migrations: Dict[int, int] = {}   # job_id -> times stolen
+        self._quarantined_until: Dict[int, float] = {}   # shard -> t
         self._in_cycle = False
         fabric.on_event(self._on_event)
 
@@ -202,14 +223,26 @@ class ElasticController:
         finally:
             self._in_cycle = False
 
+    def _fleet_health(self) -> List[ShardHealth]:
+        return fleet_health(self.fabric.shards,
+                            getattr(self.fabric, "faults", None))
+
     def control_cycle(self, t: float) -> None:
         """One deterministic control decision at sim time ``t``."""
         if len(self.fabric.shards) < 2:
             return
-        healths = fleet_health(self.fabric.shards)
+        healths = self._fleet_health()
         # Reclaim first: idle warm GPUs return to cold early (billing
         # stops), making low-pressure shards better donors below.
         self._reclaim_idle(t, healths)
+        # Failure awareness next: quarantine flappers, evacuate
+        # preemption-warned shards, shed doomed best-effort load — all
+        # before autoscale/steal read their pressure snapshot, so the
+        # healthy mechanisms never route work toward dying capacity.
+        faults = getattr(self.fabric, "faults", None)
+        if faults is not None:
+            self._failure_cycle(t, healths, faults)
+            healths = self._fleet_health()
         # Autoscale first, on the undisturbed pressure snapshot: moving
         # cold capacity toward saturated shards keeps their warm pools
         # consolidated (cheap). Stealing then spreads only the overflow
@@ -220,7 +253,165 @@ class ElasticController:
             self._autoscale_cycle(t, healths)
         if self.cfg.steal_enabled:
             # re-snapshot: resizes changed capacity and free pools
-            self._steal_cycle(t, fleet_health(self.fabric.shards))
+            self._steal_cycle(t, self._fleet_health())
+
+    # -- failure awareness (active only with a FaultPlane on the fabric) -------
+
+    def is_quarantined(self, shard: int, t: float) -> bool:
+        """Is ``shard`` currently benched for flapping? Consulted by
+        ``fabric.shard_admissible`` (placement + retries) and by the
+        steal/autoscale destination filters."""
+        return t < self._quarantined_until.get(shard, float("-inf"))
+
+    def _failure_cycle(self, t: float, healths: List[ShardHealth],
+                       faults) -> None:
+        cfg = self.cfg
+        if cfg.quarantine_enabled:
+            self._quarantine_cycle(t, faults)
+        if cfg.drain_on_warning and faults.warned:
+            self._drain_cycle(t, healths, faults)
+        if cfg.shed_enabled and faults.capacity_lost() > 0:
+            self._shed_cycle(t, faults)
+
+    def _quarantine_cycle(self, t: float, faults) -> None:
+        """Bench shards whose recent failure count marks them as
+        flapping. Re-admission is health-gated, not a fixed timer: a
+        shard that keeps failing inside the window has its bench
+        extended every cycle, and only ages back in once its failure
+        history clears ``flap_window``."""
+        cfg = self.cfg
+        for i in range(len(self.fabric.shards)):
+            if faults.is_down(i):
+                continue               # dead shards need no bench
+            fails = faults.recent_failures(i, t, cfg.flap_window)
+            if fails < cfg.flap_threshold:
+                continue
+            newly = not self.is_quarantined(i, t)
+            self._quarantined_until[i] = max(
+                self._quarantined_until.get(i, float("-inf")),
+                t + cfg.quarantine_s)
+            if newly:
+                self.quarantines += 1
+                if self.audit is not None:
+                    self.audit.decision(
+                        time=t, action=QUARANTINE, shard=i,
+                        detail=(f"{fails} failures in {cfg.flap_window:g}s "
+                                f">= {cfg.flap_threshold}; benched until "
+                                f"t={t + cfg.quarantine_s:g}"),
+                        inputs={"recent_failures": fails})
+
+    def _drain_cycle(self, t: float, healths: List[ShardHealth],
+                     faults) -> None:
+        """Proactively evacuate pending work off preemption-warned
+        shards during the warning lead time — moved jobs restart from a
+        queue, not from a crash, so no retry budget is spent and no
+        checkpoint is lost."""
+        shards = self.fabric.shards
+        by_shard = {h.shard: h for h in healths}
+        free = {h.shard: h.free_capacity for h in healths}
+        for src in sorted(faults.warned):
+            for job in list(shards[src].pending_jobs()):
+                need = job.profile().gpus_per_replica
+                best = None
+                best_key = None
+                for h in healths:
+                    dst = h.shard
+                    if (dst == src or shards[dst].cfg.max_gpus < need
+                            or not self.fabric.shard_admissible(dst)):
+                        continue
+                    if free[dst] < need:
+                        # a drain only beats the orphan->retry path when
+                        # the destination can actually start the job;
+                        # pushing evacuees into a saturated queue just
+                        # trades one wait for another and forfeits the
+                        # warned shard's remaining lead-time throughput
+                        continue
+                    warm = len(shards[dst].pool(job.llm).idle) >= need
+                    key = (warm, free[dst], -dst)
+                    if best_key is None or key > best_key:
+                        best, best_key = dst, key
+                if best is None:
+                    continue           # nowhere to go: the crash path
+                #   (orphan -> retry) will pick the job up instead
+                if self.fabric.migrate(job.job_id, best, at=t):
+                    free[best] -= need
+                    self.drains += 1
+                    if self.audit is not None:
+                        self.audit.decision(
+                            time=t, action=DRAIN, shard=best,
+                            job_id=job.job_id, tenant=job.tenant,
+                            detail=(f"evacuated shard {src} (preemption "
+                                    f"warned) -> {best}"),
+                            inputs={"src": by_shard[src],
+                                    "dst": by_shard[best]})
+
+    def _shed_cycle(self, t: float, faults) -> None:
+        """Graceful degradation while the fleet is short on capacity:
+        drop pending *best-effort* jobs that would miss their SLO even
+        if started right now at the maximum feasible replica count —
+        they can only burn GPUs premium/standard jobs need, and their
+        violation is already certain."""
+        gmax = max(e.cfg.max_gpus for e in self.fabric.shards)
+        for eng in self.fabric.shards:
+            for job in list(eng.pending_jobs()):
+                if job.slo_class.priority >= 0:
+                    continue           # only best-effort class is shed
+                prof = job.profile()
+                gpus = min(eng.cfg.max_replicas_per_job
+                           * prof.gpus_per_replica, max(gmax, 1))
+                if gpus < prof.gpus_per_replica:
+                    continue
+                best_fin = t + exec_time(
+                    job, gpus, used_bank=eng.use_bank_for(job),
+                    alloc_overhead=prof.warm_overhead)
+                if best_fin <= job.deadline:
+                    continue           # still salvageable: keep it
+                if eng.extract_pending(job.job_id) is None:
+                    continue
+                self.sheds += 1
+                if self.audit is not None:
+                    self.audit.decision(
+                        time=t, action=SHED, shard=-1, job_id=job.job_id,
+                        tenant=job.tenant,
+                        detail=(f"best-effort job doomed (best finish "
+                                f"{best_fin:.0f} > deadline "
+                                f"{job.deadline:.0f}) while fleet is "
+                                f"{faults.capacity_lost()} GPUs short"))
+                self.fabric.shed_job(job, t,
+                                     "degraded fleet: doomed best-effort "
+                                     "load shed")
+        # Second stage: doomed best-effort jobs *holding GPUs* while
+        # higher classes queue on the same shard. Their violation is
+        # already certain (scheduled finish past deadline), so every
+        # extra second they run starves salvageable premium/standard
+        # work of capacity the degraded fleet no longer has — kill them
+        # and let the queue claim the GPUs at the next round. The
+        # terminal record is a violated shed either way.
+        for eng in self.fabric.shards:
+            if not any(j.slo_class.priority >= 0
+                       for j in eng.pending_jobs()):
+                continue
+            for job_id, (job, gpus) in list(eng.running.items()):
+                if job.slo_class.priority >= 0:
+                    continue
+                fin = eng.finish_time_of(job_id)
+                if fin is None or fin <= job.deadline:
+                    continue
+                if eng.cancel_running(job_id, t) is None:
+                    continue
+                eng.ensure_round(t)
+                self.sheds += 1
+                if self.audit is not None:
+                    self.audit.decision(
+                        time=t, action=SHED, shard=-1, job_id=job.job_id,
+                        tenant=job.tenant,
+                        detail=(f"doomed running best-effort job "
+                                f"(scheduled finish {fin:.0f} > deadline "
+                                f"{job.deadline:.0f}) preempted for "
+                                f"queued premium/standard work"))
+                self.fabric.shed_job(job, t,
+                                     "degraded fleet: doomed running "
+                                     "best-effort job preempted")
 
     # -- mechanism 0: early fleet-wide idle reclaim ----------------------------
 
@@ -291,6 +482,8 @@ class ElasticController:
                         continue
                     if free[dst] < need:
                         continue
+                    if not self.fabric.shard_admissible(dst):
+                        continue   # dead / warned / quarantined shard
                     warm = len(shards[dst].pool(job.llm).idle) >= need
                     if self.cfg.steal_only_salvageable:
                         # SLO-aware: move only where the (warmth-
@@ -351,7 +544,8 @@ class ElasticController:
 
         receivers = [h for h in healths
                      if self._hot_streak.get(h.shard, 0) >= cfg.hysteresis_cycles
-                     and cooled(h.shard)]
+                     and cooled(h.shard)
+                     and self.fabric.shard_admissible(h.shard)]
         donors = [h for h in healths
                   if h.pressure < cfg.pressure_low and cooled(h.shard)
                   and h.cold_free > 0]

@@ -58,6 +58,7 @@ from repro.core.jobs import (
     JobPhase,
     SLOClass,
     exec_time,
+    iter_time,
 )
 
 ARRIVAL, ROUND, JOB_DONE = "arrival", "round", "job_done"
@@ -116,6 +117,20 @@ class SimConfig:
     use_latency_budget: bool = True    # Table 8 'w/o Latency Budget'
     max_replicas_per_job: int = 16
     best_effort: bool = True           # run SLO-infeasible jobs when idle
+    # Crash-aware checkpointing (None = off: durations are bit-identical
+    # to a checkpoint-free engine, which is what the goldens pin). With
+    # an interval, every `checkpoint_interval_s` of tuning compute pays
+    # one `checkpoint_write_s`; a job resuming from checkpointed
+    # progress (iters_done > 0) pays `checkpoint_restore_s` once.
+    checkpoint_interval_s: Optional[float] = None
+    checkpoint_write_s: float = 1.5
+    checkpoint_restore_s: float = 4.0
+    # Jobs whose remaining tuning compute is below this never checkpoint
+    # (no writes, no crash credit): the write tax is paid by every job
+    # up front while the credit only pays out for the few that actually
+    # die mid-flight, so snapshotting short jobs is negative expected
+    # value. 0.0 (default) checkpoints everything.
+    checkpoint_min_compute_s: float = 0.0
 
 
 @dataclass
@@ -394,6 +409,10 @@ class ClusterEngine:
         self.outstanding_jobs = 0      # submitted, not yet recorded
         self._subscribers: List[Callable[[EngineEvent], None]] = []
         self._rounds_armed = 0         # ROUND events currently queued
+        # fault-plane state: step-time multiplier (straggler) and the
+        # per-running-job info needed to credit checkpoints at a crash
+        self.speed = 1.0
+        self._run_info: Dict[int, Dict[str, float]] = {}
 
     # -- event stream ---------------------------------------------------------
 
@@ -474,15 +493,40 @@ class ClusterEngine:
         prof = job.profile()
         dur = exec_time(job, gpus, used_bank=used_bank,
                         alloc_overhead=alloc_overhead)
+        overhead = alloc_overhead + (
+            prof.bank_lookup_s if used_bank else 0.0
+        )
+        ckpt = self.cfg.checkpoint_interval_s
+        ckpt_on = False
+        if ckpt is not None:
+            # crash-aware: restore once when resuming from checkpointed
+            # progress, plus one write per completed checkpoint interval
+            # of tuning compute (jobs too short to plausibly benefit are
+            # exempt — see checkpoint_min_compute_s).
+            if job.iters_done > 0:
+                dur += self.cfg.checkpoint_restore_s
+                overhead += self.cfg.checkpoint_restore_s
+            compute_s = job.iters(used_bank) * iter_time(prof, gpus)
+            ckpt_on = compute_s >= self.cfg.checkpoint_min_compute_s
+            if ckpt_on:
+                dur += int(compute_s // ckpt) * self.cfg.checkpoint_write_s
+        if self.speed != 1.0:              # straggler multiplier
+            dur *= self.speed
         job.phase = JobPhase.RUNNING
         job.start_time = self.now
         job.gpus = gpus
         job.used_bank = used_bank
-        job.init_overhead = alloc_overhead + (
-            prof.bank_lookup_s if used_bank else 0.0
-        )
+        job.init_overhead = overhead
         self.running[job.job_id] = (job, gpus)
         self._finish_at[job.job_id] = self.now + dur
+        self._run_info[job.job_id] = {
+            "start": self.now,
+            "iter_s": iter_time(prof, gpus),
+            "used_bank": float(used_bank),
+            "overhead_wall": overhead * self.speed,
+            "speed": self.speed,
+            "ckpt_on": float(ckpt_on),
+        }
         self._push(self.now + dur, JOB_DONE, job)
         if gpus > prof.gpus_per_replica:   # multi-replica => storage channel
             self.cost += STORAGE_PRICE_PER_JOB_S * dur
@@ -492,6 +536,7 @@ class ClusterEngine:
         job.finish_time = self.now
         _, gpus = self.running.pop(job.job_id)
         self._finish_at.pop(job.job_id, None)
+        self._run_info.pop(job.job_id, None)
         self.outstanding_jobs -= 1
         # Per-tenant ledger, alongside the global one. A job's GPU count
         # is fixed for its whole [start, finish] span, so the tenant's
@@ -575,6 +620,35 @@ class ClusterEngine:
                     return j
         return None
 
+    def cancel_running(self, job_id: int, at: float
+                       ) -> Optional[Tuple[Job, int]]:
+        """Kill a running job mid-flight (the graceful-degradation shed
+        path): its GPUs release back to the warm pool immediately, the
+        partial run is billed to its tenant, and the already-scheduled
+        JOB_DONE event is lazily invalidated (:meth:`step` skips
+        completions for jobs no longer running). The caller owns the
+        terminal outcome — no JobRecord is appended here. Returns
+        ``(job, gpus)``, or None if the job is not running."""
+        if job_id not in self.running:
+            return None
+        t = max(at, self.now)
+        self._advance(t)
+        job, gpus = self.running.pop(job_id)
+        self._finish_at.pop(job_id, None)
+        self._run_info.pop(job_id, None)
+        self.outstanding_jobs -= 1
+        dur = t - job.start_time
+        if dur > 0:
+            self.gpu_seconds_by_tenant[job.tenant] = (
+                self.gpu_seconds_by_tenant.get(job.tenant, 0.0)
+                + gpus * dur)
+            self.cost_by_tenant[job.tenant] = (
+                self.cost_by_tenant.get(job.tenant, 0.0)
+                + gpus * dur * self.cfg.price_per_gpu_s
+                * job.slo_class.price_tier)
+        self._on_job_done(job, gpus)
+        return job, gpus
+
     def pending_jobs(self) -> List[Job]:
         """Every job currently in a pending queue (all LLMs)."""
         return [j for q in self.pending.values() for j in q]
@@ -607,6 +681,93 @@ class ClusterEngine:
             delta = -take
         self.cfg.max_gpus += delta
         return self.cfg.max_gpus
+
+    # -- fault-plane verbs (used by repro.cluster.faults) ----------------------
+
+    def _credit_checkpoint(self, job: Job, t: float, *,
+                           final: bool = False) -> None:
+        """Credit a killed job with the iterations its last completed
+        checkpoint covers. Progress advances in whole checkpoint blocks:
+        one block = ``checkpoint_interval_s`` of compute plus one write,
+        both stretched by the shard's speed multiplier at start time.
+        ``final=True`` models a snapshot flushed during a preemption
+        warning lead: every completed iteration survives, not just the
+        last periodic block."""
+        info = self._run_info.get(job.job_id)
+        ckpt = self.cfg.checkpoint_interval_s
+        if info is None or ckpt is None or info["iter_s"] <= 0:
+            return
+        if not info.get("ckpt_on", 1.0):
+            return
+        block_wall = (ckpt + self.cfg.checkpoint_write_s) * info["speed"]
+        work = t - info["start"] - info["overhead_wall"]
+        if work <= 0 or block_wall <= 0:
+            return
+        if final:
+            stalls = int(work // block_wall) * (
+                self.cfg.checkpoint_write_s * info["speed"])
+            compute = (work - stalls) / info["speed"]
+            credit = int(compute / info["iter_s"])
+        else:
+            credit = int(int(work // block_wall) * ckpt / info["iter_s"])
+        remaining = job.iters(bool(info["used_bank"]))
+        job.iters_done += min(credit, remaining)
+
+    def crash(self, at: float, *, final_snapshot: bool = False
+              ) -> Tuple[List[Job], int]:
+        """Fail this shard at ``at``: billing advances to the crash
+        instant, every running job is killed (checkpointed progress
+        credited onto ``job.iters_done``), pending jobs and undelivered
+        arrivals are orphaned, all pools are dropped, and capacity goes
+        to zero (a dead shard neither bills nor attracts placement).
+        ``final_snapshot=True`` means the kill was announced (spot
+        preemption warning) and the lead time flushed a last checkpoint,
+        so running jobs keep all completed iterations. Returns
+        ``(orphans, capacity_lost)``; the orphans still carry their
+        runtime state so the fabric can emit lifecycle events before
+        scrubbing them for requeue."""
+        t = max(at, self.now)
+        self._advance(t)
+        orphans: List[Job] = []
+        for job, _gpus in self.running.values():
+            self._credit_checkpoint(job, t, final=final_snapshot)
+            orphans.append(job)
+        self.running.clear()
+        self._finish_at.clear()
+        self._run_info.clear()
+        for q in self.pending.values():
+            orphans.extend(q)
+        self.pending.clear()
+        orphans.extend(self.queued_arrivals())
+        self._events.clear()
+        self._rounds_armed = 0
+        self.outstanding_jobs -= len(orphans)
+        for p in self.pools.values():
+            p.idle.clear()
+            p.warming.clear()
+            p.busy = 0
+        lost = self.cfg.max_gpus
+        self.cfg.max_gpus = 0
+        self.cold_free = 0
+        self.speed = 1.0
+        return orphans, lost
+
+    def restore(self, capacity: int, at: float) -> None:
+        """Bring a crashed/preempted shard back with ``capacity`` cold
+        GPUs at ``at``. Work re-enters via :meth:`admit_at`."""
+        self._advance(max(at, self.now))
+        self.cfg.max_gpus += capacity
+        self.cold_free += capacity
+
+    def set_speed(self, factor: float, at: float) -> None:
+        """Apply a straggler step-time multiplier (> 1 is slower) to
+        jobs started from ``at`` on. Already-running jobs keep their
+        scheduled completions — the slowdown models degraded instances
+        picking up new work, deterministically."""
+        if factor <= 0:
+            raise ValueError(f"speed factor must be > 0, got {factor}")
+        self._advance(max(at, self.now))
+        self.speed = factor
 
     def begin(self, jobs: Sequence[Job] = ()) -> None:
         """Submit ``jobs`` and arm the scheduler-round clock. Follow with
@@ -646,7 +807,10 @@ class ClusterEngine:
                 self.pending.setdefault(payload.llm, []).append(payload)
             self._emit(ARRIVAL, payload)
         elif kind == JOB_DONE:
-            self._complete(payload)
+            # lazy invalidation: cancel_running leaves its stale
+            # completion event in the heap
+            if payload.job_id in self.running:
+                self._complete(payload)
         elif kind == ROUND:
             self._rounds_armed -= 1
             self._maintain()

@@ -44,11 +44,22 @@ from repro.cluster.elastic import (
 from repro.cluster.engine import (
     ClusterEngine,
     EngineEvent,
+    JobRecord,
     SimConfig,
     SimResult,
 )
+from repro.cluster.faults import (
+    FaultPlane,
+    JOB_ORPHANED,
+    JOB_RETRIED,
+    JOB_SHED,
+    SHARD_FAILED,
+    SHARD_RECOVERED,
+    SHARD_SLOWED,
+    SHARD_WARNED,
+)
 from repro.cluster.health import fleet_health
-from repro.core.jobs import Job
+from repro.core.jobs import Job, JobPhase
 
 PlacementFn = Callable[[Job, Sequence[ClusterEngine]], int]
 
@@ -144,6 +155,7 @@ class ClusterFabric:
         shards: int = 1,
         placement: str = "llm-affinity",
         elastic: Optional[Union[ElasticConfig, bool]] = None,
+        faults: Optional[FaultPlane] = None,
     ):
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
@@ -171,10 +183,14 @@ class ClusterFabric:
             self._wire_shard(i)
         self.placed: Dict[int, int] = {}      # job_id -> shard index
         self.rejections: List[Tuple[Job, str]] = []   # quota-bounced jobs
+        self._shed_records: List[JobRecord] = []      # fault-plane sheds
         self.controller: Optional[ElasticController] = None
         if elastic:
             self.controller = ElasticController(
                 self, elastic if isinstance(elastic, ElasticConfig) else None)
+        self.faults: Optional[FaultPlane] = None
+        if faults is not None:
+            self.faults = faults.attach(self)
 
     # -- streaming -----------------------------------------------------------
 
@@ -226,7 +242,8 @@ class ClusterFabric:
                         time=self.now, action=JOB_REJECTED, shard=-1,
                         job_id=job.job_id, tenant=job.tenant, detail=reason,
                         inputs={f"shard{h.shard}": h
-                                for h in fleet_health(self.shards)})
+                                for h in fleet_health(self.shards,
+                                                      self.faults)})
                 self._dispatch(EngineEvent(
                     kind=JOB_REJECTED, time=self.now, job=job, shard=-1,
                     detail=reason))
@@ -234,6 +251,13 @@ class ClusterFabric:
         need = job.profile().gpus_per_replica
         eligible = [i for i, e in enumerate(self.shards)
                     if e.cfg.max_gpus >= need]
+        if self.faults is not None:
+            # avoid dead / preemption-warned / quarantined shards while
+            # any healthy one remains (with none left, fall through to
+            # the capacity-only list: queueing somewhere beats nowhere)
+            healthy = [i for i in eligible if self.shard_admissible(i)]
+            if healthy:
+                eligible = healthy
         if eligible and len(eligible) < len(self.shards):
             sub = [self.shards[i] for i in eligible]
             k = self._place(job, sub)
@@ -266,11 +290,27 @@ class ClusterFabric:
         while True:
             live = [(eng.next_event_time(), i)
                     for i, eng in enumerate(self.shards) if eng.has_events()]
-            if not live:
+            ft = self.faults.next_time() if self.faults is not None else None
+            if not live and ft is None:
                 break
+            if ft is not None and (not live or ft <= min(live)[0]):
+                # fault-plane actions (injections, recoveries, retry
+                # backoffs) fire at their exact simulated time, even
+                # when every engine is idle
+                self.faults.fire_next()
+                continue
             _, i = min(live)
             self.shards[i].step()
-        return _merge_results([eng.finish() for eng in self.shards])
+        return self._final_result([eng.finish() for eng in self.shards])
+
+    def _final_result(self, per_shard: List[SimResult]) -> SimResult:
+        """Merge shard results plus any fault-plane shed records (each a
+        terminal, violated outcome billed to no shard)."""
+        if self._shed_records:
+            per_shard = per_shard + [SimResult(
+                records=list(self._shed_records), cost=0.0,
+                gpu_seconds=0.0, makespan=0.0)]
+        return _merge_results(per_shard)
 
     # -- elastic control-plane verbs -----------------------------------------
 
@@ -323,6 +363,110 @@ class ClusterFabric:
                 shard=i, detail=f"{before} -> {after} GPUs"))
         return after
 
+    # -- fault-plane verbs (driven by repro.cluster.faults.FaultPlane) --------
+
+    def shard_admissible(self, i: int) -> bool:
+        """May new/retried work be placed on shard ``i`` right now? No
+        while the fault plane has it dead or preemption-warned, or the
+        controller has it quarantined for flapping."""
+        if self.faults is not None and not self.faults.placeable(i):
+            return False
+        if self.controller is not None and self.controller.is_quarantined(
+                i, self.now):
+            return False
+        return True
+
+    def fail_shard(self, i: int, at: float, *, reason: str = "crash",
+                   final_snapshot: bool = False) -> Tuple[List[Job], int]:
+        """Kill shard ``i`` at ``at``: the engine's :meth:`crash` credits
+        checkpoints and returns the orphans; this layer emits the
+        lifecycle events (``shard_failed`` + one ``job_orphaned`` per
+        orphan, while the job still carries its runtime state so span
+        folding can close truncated init/running spans), scrubs each
+        orphan back to a pristine pending job, and hands it to the fault
+        plane's retry scheduler."""
+        orphans, lost = self.shards[i].crash(at, final_snapshot=final_snapshot)
+        self._dispatch(EngineEvent(
+            kind=SHARD_FAILED, time=at, shard=i,
+            detail=f"{reason}: -{lost} GPUs, {len(orphans)} jobs orphaned"))
+        for job in orphans:
+            self._dispatch(EngineEvent(
+                kind=JOB_ORPHANED, time=at, job=job, shard=i, detail=reason))
+            self._scrub(job)
+            self.placed.pop(job.job_id, None)
+            if self.faults is not None:
+                self.faults.on_orphaned(job, at)
+        return orphans, lost
+
+    def recover_shard(self, i: int, capacity: int, at: float) -> None:
+        """Restore ``capacity`` cold GPUs to a failed shard at ``at``."""
+        self.shards[i].restore(capacity, at)
+        self._dispatch(EngineEvent(
+            kind=SHARD_RECOVERED, time=at, shard=i,
+            detail=f"+{capacity} GPUs restored"))
+
+    def slow_shard(self, i: int, factor: float, at: float) -> None:
+        """Apply (or clear, with ``factor=1.0``) a straggler step-time
+        multiplier on shard ``i``."""
+        self.shards[i].set_speed(factor, at)
+        self._dispatch(EngineEvent(
+            kind=SHARD_SLOWED, time=at, shard=i,
+            detail=f"x{factor:g} step time"))
+
+    def warn_shard(self, i: int, at: float, *, kill_at: float) -> None:
+        """Announce a spot preemption of shard ``i`` (the lead-time
+        window a failure-aware controller drains in)."""
+        self._dispatch(EngineEvent(
+            kind=SHARD_WARNED, time=at, shard=i,
+            detail=f"spot preemption at t={kill_at:g}"))
+
+    def requeue(self, job: Job, at: float, *, attempt: int = 1) -> bool:
+        """Re-place an orphaned job through the fabric's placement at
+        ``at``. Prefers admissible shards (alive, unwarned, not
+        quarantined) but falls back to any shard with replica capacity;
+        returns False — job untouched — only when no shard can hold one
+        replica."""
+        need = job.profile().gpus_per_replica
+        eligible = [i for i, e in enumerate(self.shards)
+                    if e.cfg.max_gpus >= need]
+        healthy = [i for i in eligible if self.shard_admissible(i)]
+        pool = healthy or eligible
+        if not pool:
+            return False
+        sub = [self.shards[i] for i in pool]
+        k = self._place(job, sub)
+        i = pool[k] if 0 <= k < len(sub) else pool[0]
+        job.restarts += 1
+        self.placed[job.job_id] = i
+        self.shards[i].admit_at(job, at)
+        self._dispatch(EngineEvent(
+            kind=JOB_RETRIED, time=at, job=job, shard=i,
+            detail=f"attempt {attempt} -> shard {i}"))
+        return True
+
+    def shed_job(self, job: Job, at: float, reason: str) -> None:
+        """Terminal failure outcome: record the job as violated (it will
+        never run) and emit ``job_shed``. Exactly one terminal record
+        per submitted job is the invariant the property tests pin."""
+        self.placed.pop(job.job_id, None)
+        self._shed_records.append(JobRecord(
+            job=job, gpus=0, used_bank=False, start=float("inf"),
+            finish=float("inf"), violated=True, wait=float("inf"),
+            init_overhead=0.0))
+        self._dispatch(EngineEvent(
+            kind=JOB_SHED, time=at, job=job, shard=-1, detail=reason))
+
+    def _scrub(self, job: Job) -> None:
+        """Reset a killed job's runtime state so it re-enters placement
+        as a pristine pending job (checkpointed ``iters_done`` and the
+        ``restarts`` count survive — that is the recovery model)."""
+        job.phase = JobPhase.PENDING
+        job.start_time = None
+        job.finish_time = None
+        job.gpus = 0
+        job.used_bank = False
+        job.init_overhead = 0.0
+
     # -- introspection -------------------------------------------------------
 
     @property
@@ -332,11 +476,12 @@ class ClusterFabric:
 
     @property
     def records(self):
-        return [r for eng in self.shards for r in eng.records]
+        return ([r for eng in self.shards for r in eng.records]
+                + list(self._shed_records))
 
     def result(self) -> SimResult:
         """Merged fleet-wide result so far (no draining side effects)."""
-        return _merge_results([eng.result() for eng in self.shards])
+        return self._final_result([eng.result() for eng in self.shards])
 
     def summary(self) -> Dict[str, float]:
         return self.result().summary()

@@ -38,6 +38,10 @@ class ShardHealth:
     pending_gpu_demand: int    # sum of one-replica GPU needs over pending
     late_pending: int          # pending jobs whose best-case finish misses SLO
     min_slack: float           # tightest projected deadline slack (inf if idle)
+    # failure-plane signals (defaults describe a fault-free shard)
+    alive: bool = True         # False once the fault plane killed the shard
+    draining: bool = False     # inside a spot-preemption warning window
+    recent_failures: int = 0   # crash/preempt count in the flap window
 
     @property
     def pressure(self) -> float:
@@ -62,8 +66,12 @@ def projected_slack(engine: ClusterEngine, job) -> float:
     return job.deadline - engine.now - t
 
 
-def shard_health(engine: ClusterEngine, shard: int = 0) -> ShardHealth:
-    """Snapshot one engine shard's pressure signals."""
+def shard_health(engine: ClusterEngine, shard: int = 0,
+                 faults=None, *, flap_window: float = 300.0) -> ShardHealth:
+    """Snapshot one engine shard's pressure signals. Pass the fabric's
+    :class:`~repro.cluster.faults.FaultPlane` to fill the failure
+    signals (alive / draining / recent failure count); without one the
+    snapshot describes a fault-free shard."""
     warm_idle = sum(len(p.idle) for p in engine.pools.values())
     warm_total = sum(p.total() for p in engine.pools.values())
     running_gpus = sum(g for _, g in engine.running.values())
@@ -91,9 +99,15 @@ def shard_health(engine: ClusterEngine, shard: int = 0) -> ShardHealth:
         pending_gpu_demand=demand,
         late_pending=late,
         min_slack=min_slack,
+        alive=faults is None or not faults.is_down(shard),
+        draining=faults is not None and shard in faults.warned,
+        recent_failures=(0 if faults is None else
+                         faults.recent_failures(shard, engine.now,
+                                                flap_window)),
     )
 
 
-def fleet_health(shards: Sequence[ClusterEngine]) -> List[ShardHealth]:
+def fleet_health(shards: Sequence[ClusterEngine],
+                 faults=None) -> List[ShardHealth]:
     """One :class:`ShardHealth` per shard, in shard order."""
-    return [shard_health(eng, i) for i, eng in enumerate(shards)]
+    return [shard_health(eng, i, faults) for i, eng in enumerate(shards)]

@@ -106,6 +106,9 @@ class Job:
     gpus: int = 0
     used_bank: bool = False
     init_overhead: float = 0.0     # allocation / instance-init share, set at start
+    # fault-tolerance state (crash-aware recovery; see cluster/faults.py)
+    iters_done: int = 0            # checkpointed progress surviving a crash
+    restarts: int = 0              # times this job was orphaned and retried
 
     @property
     def deadline(self) -> float:
@@ -115,8 +118,11 @@ class Job:
         return LLM_PROFILES[self.llm]
 
     def iters(self, used_bank: bool) -> int:
-        return min(self.iters_bank if used_bank else self.iters_manual,
-                   self.max_iters)
+        """Remaining iterations: the route's ITA minus checkpointed
+        progress (``iters_done`` is 0 unless the job survived a crash)."""
+        total = min(self.iters_bank if used_bank else self.iters_manual,
+                    self.max_iters)
+        return max(total - self.iters_done, 0)
 
 
 def iter_time(profile: LLMProfile, gpus: int) -> float:

@@ -38,6 +38,15 @@ from typing import Dict, List, Optional
 
 from repro.cluster.elastic import JOB_REJECTED, JOB_STOLEN, SHARD_RESIZED
 from repro.cluster.engine import ARRIVAL, JOB_DONE, ROUND, EngineEvent
+from repro.cluster.faults import (
+    JOB_ORPHANED,
+    JOB_RETRIED,
+    JOB_SHED,
+    SHARD_FAILED,
+    SHARD_RECOVERED,
+    SHARD_SLOWED,
+    SHARD_WARNED,
+)
 from repro.cluster.health import shard_health
 
 from repro.obs.audit import AuditEntry, AuditLog, health_dict
@@ -111,6 +120,9 @@ class Telemetry:
         controller = getattr(fabric, "controller", None)
         if controller is not None:
             controller.audit = self.audit
+        faults = getattr(fabric, "faults", None)
+        if faults is not None:
+            faults.audit = self.audit
         return self
 
     @property
@@ -144,6 +156,22 @@ class Telemetry:
         elif kind == JOB_REJECTED:
             self.metrics.counter("rejections",
                                  tenant=ev.job.tenant).inc()
+        elif kind == SHARD_FAILED:
+            self.metrics.counter("shard_failures", shard=ev.shard).inc()
+        elif kind == SHARD_RECOVERED:
+            self.metrics.counter("shard_recoveries", shard=ev.shard).inc()
+        elif kind == SHARD_WARNED:
+            self.metrics.counter("shard_warnings", shard=ev.shard).inc()
+        elif kind == SHARD_SLOWED:
+            self.metrics.counter("shard_slowdowns", shard=ev.shard).inc()
+        elif kind == JOB_ORPHANED:
+            self.metrics.counter("jobs_orphaned", shard=ev.shard,
+                                 tenant=ev.job.tenant).inc()
+        elif kind == JOB_RETRIED:
+            self.metrics.counter("jobs_retried", shard=ev.shard,
+                                 tenant=ev.job.tenant).inc()
+        elif kind == JOB_SHED:
+            self.metrics.counter("jobs_shed", tenant=ev.job.tenant).inc()
 
     def _sample_shard(self, shard: int) -> None:
         """ShardHealth pressure/slack signals as gauges, sampled each
@@ -151,7 +179,8 @@ class Telemetry:
         if self._fabric is None or not (0 <= shard
                                         < len(self._fabric.shards)):
             return
-        h = shard_health(self._fabric.shards[shard], shard)
+        faults = getattr(self._fabric, "faults", None)
+        h = shard_health(self._fabric.shards[shard], shard, faults)
         m = self.metrics
         m.gauge("queue_depth", shard=shard).set(h.pending_jobs)
         m.gauge("pressure", shard=shard).set(h.pressure)
@@ -160,6 +189,10 @@ class Telemetry:
         m.gauge("warm_idle", shard=shard).set(h.warm_idle)
         if h.min_slack != float("inf"):
             m.gauge("min_slack_s", shard=shard).set(h.min_slack)
+        if faults is not None:
+            m.gauge("alive", shard=shard).set(1.0 if h.alive else 0.0)
+            m.gauge("draining", shard=shard).set(1.0 if h.draining else 0.0)
+            m.gauge("recent_failures", shard=shard).set(h.recent_failures)
 
     def _on_job_done(self, ev: EngineEvent) -> None:
         job = ev.job
@@ -213,4 +246,6 @@ class Telemetry:
         return {name: self.metrics.total(name)
                 for name in ("jobs_submitted", "jobs_completed",
                              "slo_violations", "steals", "resizes",
-                             "rejections", "rounds")}
+                             "rejections", "rounds", "shard_failures",
+                             "shard_recoveries", "jobs_orphaned",
+                             "jobs_retried", "jobs_shed")}

@@ -66,25 +66,39 @@ def to_chrome_trace(
     events: List[Dict] = []
     seen_pids = set()
 
+    # Horizon for rendering still-open spans (jobs that never reached
+    # JOB_DONE): latest timestamp anywhere in the recording. They are
+    # drawn as truncated spans up to the horizon instead of dropped.
+    horizon = 0.0
     for tl in tls:
         for s in tl.spans:
-            if s.end is None:
-                continue          # open span: job never completed
+            horizon = max(horizon, s.start,
+                          s.end if s.end is not None else s.start)
+        for h in tl.hops:
+            horizon = max(horizon, h.time)
+
+    for tl in tls:
+        for s in tl.spans:
+            end = s.end if s.end is not None else max(horizon, s.start)
+            truncated = s.truncated or s.end is None
             seen_pids.add(s.shard)
             events.append({
                 "name": s.phase,
                 "cat": "job",
                 "ph": "X",
                 "ts": s.start * _US,
-                "dur": (s.end - s.start) * _US,
+                "dur": (end - s.start) * _US,
                 "pid": s.shard,
                 "tid": tl.job_id,
-                "cname": _PHASE_COLOR.get(s.phase),
+                "cname": ("terrible" if truncated
+                          else _PHASE_COLOR.get(s.phase)),
                 "args": {
                     "task_id": tl.task_id, "llm": tl.llm,
                     "tenant": tl.tenant, "slo_class": tl.slo_class,
                     "gpus": tl.gpus, "used_bank": tl.used_bank,
                     "deadline_s": tl.deadline, "violated": tl.violated,
+                    "truncated": truncated, "retries": tl.retries,
+                    "shed_reason": tl.shed_reason,
                 },
             })
         for h in tl.hops:

@@ -17,11 +17,25 @@ into one :class:`JobTimeline` per job:
 * ``job_rejected`` produces a zero-length *rejected* timeline carrying
   the quota reason.
 
+The fault plane (:mod:`repro.cluster.faults`) adds three more kinds:
+
+* ``job_orphaned`` closes whatever span was open as **truncated** — if
+  the job had already started (the event fires before the fabric scrubs
+  the runtime state), the fold derives truncated *init*/*running* spans
+  up to the crash instant, so the trace shows exactly how much work the
+  failure threw away;
+* ``job_retried`` opens a fresh queued span on the retry shard and
+  records the crash-driven move as a :class:`ShardHop`;
+* ``job_shed`` closes the open span truncated and stamps the shed
+  reason — the job's terminal state without a ``JOB_DONE``.
+
 Spans are plain frozen dataclasses; the Chrome-trace / JSONL exporters
 (:mod:`repro.obs.export`) consume them as-is. Jobs that never complete
 (still pending when the run is cut off) keep their open queued span —
 ``end=None`` — which is itself diagnostic: that is *where* a violated
-job spent its deadline.
+job spent its deadline. Call :meth:`TimelineRecorder.finalize` after a
+run to close those stragglers as truncated spans at the horizon
+instead of dropping them.
 """
 from __future__ import annotations
 
@@ -30,6 +44,7 @@ from typing import Dict, List, Optional
 
 from repro.cluster.elastic import JOB_REJECTED, JOB_STOLEN
 from repro.cluster.engine import ARRIVAL, JOB_DONE, EngineEvent
+from repro.cluster.faults import JOB_ORPHANED, JOB_RETRIED, JOB_SHED
 
 QUEUED, INIT, RUNNING, REJECTED = "queued", "init", "running", "rejected"
 
@@ -44,6 +59,7 @@ class Span:
     shard: int
     start: float
     end: Optional[float]
+    truncated: bool = False    # cut short by a fault / run horizon
 
     @property
     def duration(self) -> Optional[float]:
@@ -77,6 +93,8 @@ class JobTimeline:
     used_bank: bool = False
     violated: Optional[bool] = None     # None until JOB_DONE / rejection
     reject_reason: Optional[str] = None
+    retries: int = 0                    # crash-driven re-placements
+    shed_reason: Optional[str] = None   # set when the job was load-shed
 
     @property
     def shard(self) -> int:
@@ -113,8 +131,11 @@ class JobTimeline:
             "used_bank": self.used_bank,
             "violated": self.violated,
             "reject_reason": self.reject_reason,
+            "retries": self.retries,
+            "shed_reason": self.shed_reason,
             "spans": [{"phase": s.phase, "shard": s.shard,
-                       "start": s.start, "end": s.end}
+                       "start": s.start, "end": s.end,
+                       "truncated": s.truncated}
                       for s in self.spans],
             "hops": [{"time": h.time, "src": h.src, "dst": h.dst}
                      for h in self.hops],
@@ -129,10 +150,13 @@ class JobTimeline:
             deadline=float(d["deadline"]), gpus=int(d["gpus"]),
             used_bank=bool(d["used_bank"]), violated=d["violated"],
             reject_reason=d.get("reject_reason"),
+            retries=int(d.get("retries", 0)),
+            shed_reason=d.get("shed_reason"),
         )
         tl.spans = [Span(job_id=tl.job_id, phase=s["phase"],
                          shard=int(s["shard"]), start=float(s["start"]),
-                         end=None if s["end"] is None else float(s["end"]))
+                         end=None if s["end"] is None else float(s["end"]),
+                         truncated=bool(s.get("truncated", False)))
                     for s in d["spans"]]
         tl.hops = [ShardHop(job_id=tl.job_id, time=float(h["time"]),
                             src=int(h["src"]), dst=int(h["dst"]))
@@ -164,6 +188,12 @@ class TimelineRecorder:
             self._on_done(ev)
         elif ev.kind == JOB_REJECTED:
             self._on_rejected(ev)
+        elif ev.kind == JOB_ORPHANED:
+            self._on_orphaned(ev)
+        elif ev.kind == JOB_RETRIED:
+            self._on_retried(ev)
+        elif ev.kind == JOB_SHED:
+            self._on_shed(ev)
 
     def _timeline_for(self, ev: EngineEvent) -> JobTimeline:
         job = ev.job
@@ -176,9 +206,10 @@ class TimelineRecorder:
             self._timelines[job.job_id] = tl
         return tl
 
-    def _close_open_span(self, tl: JobTimeline, t: float) -> Optional[Span]:
+    def _close_open_span(self, tl: JobTimeline, t: float,
+                         truncated: bool = False) -> Optional[Span]:
         if tl.spans and tl.spans[-1].end is None:
-            closed = replace(tl.spans[-1], end=t)
+            closed = replace(tl.spans[-1], end=t, truncated=truncated)
             tl.spans[-1] = closed
             return closed
         return None
@@ -226,6 +257,64 @@ class TimelineRecorder:
                              start=ev.time, end=ev.time))
         tl.reject_reason = ev.detail or "rejected"
         tl.violated = None
+
+    def _on_orphaned(self, ev: EngineEvent) -> None:
+        # Fired before the fabric scrubs the job, so start_time /
+        # init_overhead still describe the attempt the crash cut short.
+        job = ev.job
+        tl = self._timeline_for(ev)
+        start = job.start_time
+        if start is None:
+            self._close_open_span(tl, ev.time, truncated=True)
+            return
+        self._close_open_span(tl, start)
+        init_end = min(start + job.init_overhead, ev.time)
+        if init_end > start:
+            tl.spans.append(Span(job_id=tl.job_id, phase=INIT, shard=ev.shard,
+                                 start=start, end=init_end, truncated=True))
+        if ev.time > init_end:
+            tl.spans.append(Span(job_id=tl.job_id, phase=RUNNING,
+                                 shard=ev.shard, start=init_end, end=ev.time,
+                                 truncated=True))
+
+    def _on_retried(self, ev: EngineEvent) -> None:
+        tl = self._timeline_for(ev)
+        src = tl.spans[-1].shard if tl.spans else -1
+        if src != ev.shard:
+            tl.hops.append(ShardHop(job_id=tl.job_id, time=ev.time, src=src,
+                                    dst=ev.shard))
+        tl.retries += 1
+        tl.spans.append(Span(job_id=tl.job_id, phase=QUEUED, shard=ev.shard,
+                             start=ev.time, end=None))
+
+    def _on_shed(self, ev: EngineEvent) -> None:
+        tl = self._timeline_for(ev)
+        self._close_open_span(tl, ev.time, truncated=True)
+        tl.shed_reason = ev.detail or "shed"
+        tl.violated = True
+
+    # -- finalization --------------------------------------------------------
+
+    def finalize(self, horizon: Optional[float] = None) -> int:
+        """Close every still-open span as **truncated** at ``horizon``
+        (default: the latest timestamp seen anywhere in the recording).
+        Jobs that never reached ``JOB_DONE`` — still queued when the run
+        was cut off — end up with a closed, truncated span instead of
+        being dropped by end-aware consumers. Returns the number of
+        spans closed. Idempotent."""
+        if horizon is None:
+            horizon = 0.0
+            for tl in self._timelines.values():
+                for s in tl.spans:
+                    horizon = max(horizon, s.start,
+                                  s.end if s.end is not None else s.start)
+        closed = 0
+        for tl in self._timelines.values():
+            if tl.spans and tl.spans[-1].end is None:
+                t = max(horizon, tl.spans[-1].start)
+                self._close_open_span(tl, t, truncated=True)
+                closed += 1
+        return closed
 
     # -- reads ---------------------------------------------------------------
 

@@ -1,0 +1,415 @@
+"""Fault plane: injection mechanics, crash-aware recovery, graceful
+degradation, and the conservation properties chaos must not break."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.cluster import (
+    CHAOS_PROFILES,
+    ClusterFabric,
+    ElasticConfig,
+    FaultEvent,
+    FaultPlane,
+    HazardConfig,
+    JOB_ORPHANED,
+    JOB_RETRIED,
+    JOB_SHED,
+    RecoveryPolicy,
+    SHARD_FAILED,
+    SHARD_RECOVERED,
+    SHARD_SLOWED,
+    SHARD_WARNED,
+    SimConfig,
+    TraceConfig,
+    clone_jobs,
+    fleet_health,
+    generate_trace,
+)
+from repro.core.jobs import Job, SLO_CLASSES
+
+
+def mk_job(jid, llm="gpt2-base", submit=0.0, slo=600.0, tenant="t0",
+           iters_manual=400, iters_bank=200):
+    return Job(job_id=jid, llm=llm, submit_time=submit, slo=slo,
+               iters_manual=iters_manual, iters_bank=iters_bank,
+               tenant=tenant)
+
+
+def _home_shard(shards=2, gpus=8):
+    """The shard llm-affinity deterministically places gpt2-base on."""
+    probe = ClusterFabric(SimConfig(max_gpus=gpus), "prompttuner",
+                          shards=shards)
+    return probe.submit(mk_job(0))
+
+
+# -- zero overhead off --------------------------------------------------------
+
+
+def test_empty_fault_plane_is_float_identical_to_no_plane():
+    """A plane with nothing scheduled must not perturb a single float:
+    the fault path is pay-for-what-you-use."""
+    jobs = generate_trace(TraceConfig(load="low", seed=4, minutes=3))
+    base = ClusterFabric(SimConfig(max_gpus=16), "prompttuner", shards=2)
+    res_base = base.run(clone_jobs(jobs))
+    armed = ClusterFabric(SimConfig(max_gpus=16), "prompttuner", shards=2,
+                          faults=FaultPlane())
+    res_armed = armed.run(clone_jobs(jobs))
+    assert res_armed.summary() == res_base.summary()
+    assert [(r.job.job_id, r.start, r.finish, r.gpus)
+            for r in res_armed.records] == \
+           [(r.job.job_id, r.start, r.finish, r.gpus)
+            for r in res_base.records]
+
+
+def test_checkpointing_off_by_default_keeps_engine_results():
+    """checkpoint_interval_s=None (the default) must leave durations
+    untouched even through the new start_job code path."""
+    jobs = generate_trace(TraceConfig(load="low", seed=4, minutes=3))
+    a = ClusterFabric(SimConfig(max_gpus=16), "prompttuner", shards=1)
+    b = ClusterFabric(SimConfig(max_gpus=16, checkpoint_interval_s=None),
+                      "prompttuner", shards=1)
+    assert a.run(clone_jobs(jobs)).summary() == \
+        b.run(clone_jobs(jobs)).summary()
+
+
+# -- crash / retry mechanics --------------------------------------------------
+
+
+def test_crash_orphans_then_retries_to_completion():
+    home = _home_shard()
+    faults = FaultPlane([FaultEvent(kind="crash", time=40.0, shard=home,
+                                    down_s=30.0)])
+    fab = ClusterFabric(SimConfig(max_gpus=8), "prompttuner", shards=2,
+                        faults=faults)
+    events = []
+    fab.on_event(events.append)
+    jobs = [mk_job(i, slo=3000.0) for i in range(6)]
+    res = fab.run(clone_jobs(jobs))
+    kinds = {e.kind for e in events}
+    assert {SHARD_FAILED, SHARD_RECOVERED, JOB_ORPHANED, JOB_RETRIED} <= kinds
+    assert faults.crashes == 1 and faults.recoveries == 1
+    assert faults.retries > 0 and faults.sheds == 0
+    # every job still resolves to exactly one finite terminal record
+    assert sorted(r.job.job_id for r in res.records) == list(range(6))
+    assert all(np.isfinite(r.finish) for r in res.records)
+    assert any(r.job.restarts > 0 for r in res.records)
+    # capacity fully restored once the downtime elapsed
+    assert faults.capacity_lost() == 0
+    assert sum(e.cfg.max_gpus for e in fab.shards) == 8
+
+
+def test_checkpoint_credit_speeds_up_resume():
+    """A job crashed at iteration k must resume from its last checkpoint
+    (finishing earlier than a restart-from-zero run of the same crash),
+    and the credit must never exceed the work actually done."""
+    schedule = [FaultEvent(kind="crash", time=1200.0, shard=0, down_s=10.0)]
+
+    def finish_with(ckpt):
+        fab = ClusterFabric(
+            SimConfig(max_gpus=8, checkpoint_interval_s=ckpt),
+            "prompttuner", shards=1,
+            faults=FaultPlane(schedule))
+        res = fab.run([mk_job(0, slo=100000.0, iters_manual=20000,
+                              iters_bank=20000)])
+        (rec,) = res.records
+        return rec
+
+    slow = finish_with(None)           # restart from zero
+    fast = finish_with(30.0)           # resume from last checkpoint
+    assert slow.job.restarts == 1 and fast.job.restarts == 1
+    assert fast.job.iters_done > 0
+    assert fast.finish < slow.finish
+    # checkpoint writes are not free: the pre-crash attempt paid for
+    # them, so the saving is bounded by the crash time itself
+    assert slow.finish - fast.finish < 1200.0
+
+
+def test_permanent_crash_of_only_shard_sheds_all_jobs():
+    """down_s=None: the shard never comes back; with nowhere to retry,
+    every outstanding job must be shed as a violated terminal record."""
+    faults = FaultPlane([FaultEvent(kind="crash", time=30.0, shard=0,
+                                    down_s=None)])
+    fab = ClusterFabric(SimConfig(max_gpus=8), "prompttuner", shards=1,
+                        faults=faults)
+    events = []
+    fab.on_event(events.append)
+    jobs = [mk_job(i, slo=3000.0, iters_manual=4000, iters_bank=2000)
+            for i in range(4)]
+    res = fab.run(clone_jobs(jobs))
+    assert faults.sheds > 0
+    assert JOB_SHED in {e.kind for e in events}
+    assert sorted(r.job.job_id for r in res.records) == list(range(4))
+    shed = [r for r in res.records if np.isinf(r.finish)]
+    assert shed and all(r.violated for r in shed)
+
+
+def test_retry_budget_exhaustion_sheds_the_job():
+    """A shard that keeps flapping under one long job burns the job's
+    retry budget; the plane must shed it instead of retrying forever."""
+    faults = FaultPlane(
+        [FaultEvent(kind="flap", time=30.0, shard=0, cycles=6,
+                    period_s=60.0, down_s=2.0)],
+        recovery=RecoveryPolicy(max_retries=2, backoff_base_s=1.0))
+    fab = ClusterFabric(SimConfig(max_gpus=8), "prompttuner", shards=1,
+                        faults=faults)
+    res = fab.run([mk_job(0, slo=100000.0, iters_manual=50000,
+                          iters_bank=50000)])
+    assert faults.sheds == 1
+    assert faults.retries_used(0) == 2
+    (rec,) = res.records
+    assert rec.violated and np.isinf(rec.finish)
+
+
+# -- checkpoint policy refinements -------------------------------------------
+
+
+def test_preemption_snapshot_outruns_unannounced_crash():
+    """A warned preemption flushes a final snapshot during the lead, so
+    the resumed job keeps every completed iteration; an unannounced
+    crash at the same kill instant only keeps whole checkpoint blocks."""
+    def rec_with(schedule):
+        fab = ClusterFabric(
+            SimConfig(max_gpus=8, checkpoint_interval_s=30.0),
+            "prompttuner", shards=1, faults=FaultPlane(schedule))
+        res = fab.run([mk_job(0, slo=100000.0, iters_manual=20000,
+                              iters_bank=20000)])
+        (rec,) = res.records
+        return rec
+
+    crash = rec_with([FaultEvent(kind="crash", time=1200.0, shard=0,
+                                 down_s=10.0)])
+    warned = rec_with([FaultEvent(kind="preempt", time=1155.0, shard=0,
+                                  lead_s=45.0, down_s=10.0)])
+    assert crash.job.restarts == 1 and warned.job.restarts == 1
+    assert warned.job.iters_done > crash.job.iters_done
+    assert warned.finish < crash.finish
+
+
+def test_min_compute_gate_skips_short_job_checkpoints():
+    """With checkpoint_min_compute_s above every job's compute, the
+    fault-free schedule must be float-identical to checkpointing off —
+    the write tax is only levied where a resume credit could plausibly
+    pay it back — and a crashed short job restarts from zero."""
+    jobs = generate_trace(TraceConfig(load="low", seed=4, minutes=3))
+    plain = ClusterFabric(SimConfig(max_gpus=16), "prompttuner", shards=1)
+    gated = ClusterFabric(
+        SimConfig(max_gpus=16, checkpoint_interval_s=30.0,
+                  checkpoint_min_compute_s=1e9),
+        "prompttuner", shards=1)
+    assert plain.run(clone_jobs(jobs)).summary() == \
+        gated.run(clone_jobs(jobs)).summary()
+
+    faults = FaultPlane([FaultEvent(kind="crash", time=40.0, shard=0,
+                                    down_s=5.0)])
+    fab = ClusterFabric(
+        SimConfig(max_gpus=8, checkpoint_interval_s=30.0,
+                  checkpoint_min_compute_s=1e9),
+        "prompttuner", shards=1, faults=faults)
+    res = fab.run([mk_job(0, slo=3000.0, iters_manual=2000,
+                          iters_bank=2000)])
+    (rec,) = res.records
+    assert rec.job.restarts == 1 and rec.job.iters_done == 0
+
+
+# -- graceful degradation: running-job shed -----------------------------------
+
+
+def test_cancel_running_is_terminal_exactly_once():
+    """cancel_running frees the GPUs back to the warm pool, lazily
+    invalidates the queued JOB_DONE, and leaves the terminal record to
+    the caller — so a cancelled job never double-records."""
+    fab = ClusterFabric(SimConfig(max_gpus=4), "prompttuner", shards=1)
+    eng = fab.shards[0]
+    job = mk_job(0, slo=100000.0, iters_manual=4000, iters_bank=4000)
+    eng.begin([job])
+    while job.job_id not in eng.running and eng.step():
+        pass
+    assert job.job_id in eng.running
+    assert eng.cancel_running(job.job_id, eng.now) is not None
+    assert eng.cancel_running(job.job_id, eng.now) is None  # idempotent
+    assert len(eng.pool(job.llm).idle) >= 1
+    fab.shed_job(job, eng.now, "test shed")
+    while eng.step():                  # drains the stale JOB_DONE event
+        pass
+    recs = fab.records
+    assert [r.job.job_id for r in recs] == [0]
+    assert recs[0].violated and np.isinf(recs[0].finish)
+
+
+def test_doomed_running_best_effort_preempted_for_premium():
+    """Graceful degradation under capacity loss: best-effort jobs whose
+    violation is already certain are cancelled mid-run once premium
+    work queues behind them, and every job still resolves to exactly
+    one terminal record."""
+    home = _home_shard()
+    # the crash lands after the doomed best-effort jobs are already
+    # running (cold warm-up done), so the cancel path — not the pending
+    # shed — is what has to free their GPUs
+    faults = FaultPlane([FaultEvent(kind="crash", time=40.0, shard=1 - home,
+                                    down_s=None)])
+    fab = ClusterFabric(SimConfig(max_gpus=8), "prompttuner", shards=2,
+                        elastic=ElasticConfig(), faults=faults)
+    events = []
+    fab.on_event(events.append)
+    be = [Job(job_id=i, llm="gpt2-base", submit_time=0.0, slo=60.0,
+              iters_manual=4000, iters_bank=4000, tenant="hog",
+              slo_class=SLO_CLASSES["best-effort"]) for i in range(8)]
+    prem = [Job(job_id=100 + i, llm="gpt2-base", submit_time=45.0,
+                slo=600.0, iters_manual=400, iters_bank=200, tenant="vip",
+                slo_class=SLO_CLASSES["premium"]) for i in range(4)]
+    res = fab.run(clone_jobs(be + prem))
+    shed_details = [e.detail or "" for e in events if e.kind == JOB_SHED]
+    assert any("running" in d for d in shed_details)
+    ids = sorted(r.job.job_id for r in res.records)
+    assert ids == sorted(j.job_id for j in be + prem)
+    assert all(np.isfinite(r.finish) for r in res.records
+               if r.job.job_id >= 100)
+
+
+# -- preemption warning / drain ----------------------------------------------
+
+
+def test_preemption_warning_drains_pending_to_healthy_shard():
+    home = _home_shard()
+    faults = FaultPlane([FaultEvent(kind="preempt", time=20.0, shard=home,
+                                    lead_s=60.0, down_s=120.0)])
+    fab = ClusterFabric(SimConfig(max_gpus=8), "prompttuner", shards=2,
+                        elastic=ElasticConfig(), faults=faults)
+    events = []
+    fab.on_event(events.append)
+    jobs = [mk_job(i, slo=4000.0) for i in range(10)]
+    res = fab.run(clone_jobs(jobs))
+    kinds = {e.kind for e in events}
+    assert SHARD_WARNED in kinds and SHARD_FAILED in kinds
+    assert faults.preemptions == 1 and faults.warnings == 1
+    # the controller moved queued work off the doomed shard in the
+    # warning window (drains don't spend the per-cycle steal budget)
+    assert fab.controller.drains > 0
+    assert sorted(r.job.job_id for r in res.records) == list(range(10))
+    assert all(np.isfinite(r.finish) for r in res.records)
+
+
+def test_warned_shard_stops_attracting_placement():
+    home = _home_shard()
+    faults = FaultPlane([FaultEvent(kind="preempt", time=0.0, shard=home,
+                                    lead_s=300.0, down_s=60.0)])
+    fab = ClusterFabric(SimConfig(max_gpus=8), "prompttuner", shards=2,
+                        faults=faults)
+    faults.fire_next()                 # the warn action at t=0
+    assert home in faults.warned
+    assert not fab.shard_admissible(home)
+    assert fab.submit(mk_job(99)) != home
+
+
+# -- slowdown ----------------------------------------------------------------
+
+
+def test_slowdown_stretches_execution():
+    def finish_with(schedule):
+        fab = ClusterFabric(SimConfig(max_gpus=8), "prompttuner", shards=1,
+                            faults=FaultPlane(schedule))
+        events = []
+        fab.on_event(events.append)
+        res = fab.run([mk_job(0, slo=100000.0)])
+        (rec,) = res.records
+        return rec, events
+
+    base, _ = finish_with([])
+    slowed, events = finish_with(
+        [FaultEvent(kind="slow", time=0.0, shard=0, factor=3.0,
+                    duration_s=1e6)])
+    assert SHARD_SLOWED in {e.kind for e in events}
+    assert slowed.finish > base.finish
+    # a 3x straggler should stretch compute by ~3x, not just jitter it
+    assert slowed.finish > base.finish * 1.5
+
+
+# -- flap quarantine ----------------------------------------------------------
+
+
+def test_flapping_shard_is_quarantined():
+    home = _home_shard()
+    faults = FaultPlane([FaultEvent(kind="flap", time=20.0, shard=home,
+                                    cycles=3, period_s=40.0, down_s=5.0)])
+    fab = ClusterFabric(
+        SimConfig(max_gpus=8), "prompttuner", shards=2,
+        elastic=ElasticConfig(flap_threshold=2, flap_window=600.0,
+                              quarantine_s=300.0),
+        faults=faults)
+    jobs = [mk_job(i, slo=6000.0) for i in range(8)]
+    res = fab.run(clone_jobs(jobs))
+    assert faults.crashes == 3
+    assert fab.controller.quarantines >= 1
+    assert sorted(r.job.job_id for r in res.records) == list(range(8))
+
+
+def test_health_snapshot_carries_failure_signals():
+    faults = FaultPlane([FaultEvent(kind="crash", time=10.0, shard=0,
+                                    down_s=1e6)])
+    fab = ClusterFabric(SimConfig(max_gpus=8), "prompttuner", shards=2,
+                        faults=faults)
+    faults.fire_next()                 # the crash at t=10
+    healths = fleet_health(fab.shards, faults)
+    assert not healths[0].alive and healths[0].recent_failures == 1
+    assert healths[1].alive and healths[1].recent_failures == 0
+
+
+# -- conservation properties under random chaos -------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), shards=st.sampled_from([1, 2, 4]),
+       elastic=st.sampled_from([True, False]))
+@pytest.mark.slow
+def test_chaos_conserves_replicas_and_terminal_records(seed, shards,
+                                                       elastic):
+    """Across random fault schedules x shard counts x elastic on/off:
+    (1) fleet replica conservation — live capacity plus capacity lost
+    to down shards always equals the provisioned fleet; (2) every
+    submitted job resolves to exactly one terminal record."""
+    jobs = generate_trace(TraceConfig(load="low", seed=seed % 5, minutes=3))
+    hz = HazardConfig(crash_rate=30.0, preempt_rate=15.0, slow_rate=15.0,
+                      flap_rate=8.0, mean_downtime_s=45.0,
+                      preempt_lead_s=20.0, flap_period_s=30.0,
+                      horizon_s=400.0)
+    faults = FaultPlane(hazard=hz, seed=seed)
+    fab = ClusterFabric(
+        SimConfig(max_gpus=16, checkpoint_interval_s=20.0), "prompttuner",
+        shards=shards, elastic=ElasticConfig() if elastic else None,
+        faults=faults)
+
+    def check_conservation(ev):
+        if ev.kind in ("round", "job_done"):
+            assert (sum(e.cfg.max_gpus for e in fab.shards)
+                    + faults.capacity_lost()) == 16
+
+    fab.on_event(check_conservation)
+    res = fab.run(clone_jobs(jobs))
+
+    assert (sum(e.cfg.max_gpus for e in fab.shards)
+            + faults.capacity_lost()) == 16
+    ids = sorted(r.job.job_id for r in res.records)
+    assert ids == sorted(j.job_id for j in jobs), (
+        "terminal records must be exactly one per submitted job")
+    # terminal kinds partition cleanly: finite finish or violated shed
+    for r in res.records:
+        assert np.isfinite(r.finish) or r.violated
+
+
+def test_chaos_profiles_are_reproducible():
+    """Same seed + profile => the identical fault history, run to run."""
+    jobs = generate_trace(TraceConfig(load="low", seed=1, minutes=3))
+
+    def history(seed):
+        faults = FaultPlane(hazard=CHAOS_PROFILES["mixed"], seed=seed)
+        fab = ClusterFabric(SimConfig(max_gpus=16), "prompttuner",
+                            shards=2, faults=faults)
+        events = []
+        fab.on_event(events.append)
+        fab.run(clone_jobs(jobs))
+        return ([(e.time, e.kind, e.shard) for e in events
+                 if e.kind.startswith("shard_")],
+                (faults.crashes, faults.preemptions, faults.slowdowns))
+
+    assert history(7) == history(7)
+    assert history(7) != history(8)
