@@ -151,12 +151,18 @@ def chaos_setup(mode: str):
 def run_chaos_point(shards: int, profile: str, mode: str, *,
                     minutes: int, seeds: int,
                     policy: str = "prompttuner") -> Dict[str, Dict]:
+    from repro.obs import CAUSES, Telemetry
+
     total: Dict[str, float] = {
         "slo_violation_pct": 0.0, "cost_usd": 0.0, "gpu_seconds": 0.0,
         "makespan_s": 0.0, "jobs": 0.0, "wall_clock_s": 0.0,
         "crashes": 0.0, "preemptions": 0.0, "retries": 0.0,
         "sheds": 0.0, "recoveries": 0.0,
     }
+    cause_keys = tuple(f"cause_{c}_pct" for c in CAUSES + ("exec",))
+    for k in cause_keys:
+        total[k] = 0.0
+    forensics = None
     for sd in range(seeds):
         seed = BASE_SEED + sd
         mix = generate_tenant_mix(TENANTS, minutes=minutes, seed=seed)
@@ -168,6 +174,10 @@ def run_chaos_point(shards: int, profile: str, mode: str, *,
             SimConfig(max_gpus=GPUS, **ckpt_kw), policy,
             shards=shards, placement=PLACEMENTS[0], elastic=ecfg,
             faults=faults)
+        # recording rides the event stream: results are identical with
+        # it on or off (pinned in tests), so instrumenting the chaos
+        # sweep costs wall-clock only
+        tel = Telemetry().attach(fab)
         t0 = time.perf_counter()
         res = fab.run(clone_jobs(mix))
         total["wall_clock_s"] += (time.perf_counter() - t0) / seeds
@@ -178,7 +188,14 @@ def run_chaos_point(shards: int, profile: str, mode: str, *,
         for k in ("crashes", "preemptions", "retries", "sheds",
                   "recoveries"):
             total[k] += getattr(faults, k) / seeds
-    return {"total": total}
+        rep = tel.forensics()
+        shares = rep.cause_shares()
+        for c in CAUSES + ("exec",):
+            total[f"cause_{c}_pct"] += 100.0 * shares.get(c, 0.0) / seeds
+        if forensics is None:
+            # the artifact carries the first seed's full per-job report
+            forensics = rep.to_dict()
+    return {"total": total, "_forensics": forensics}
 
 
 OBS_DIR = os.environ.get("REPRO_OBS_OUT", "artifacts/obs")
@@ -235,9 +252,17 @@ def run(quick: bool = False) -> Dict:
     config["config_hash"] = hashlib.sha256(
         json.dumps(config, sort_keys=True, default=float).encode()
     ).hexdigest()[:12]
+    from repro.obs import CAUSES as _CAUSES
+
     out: Dict[str, Dict] = {
         "config": config,
         "config_keys": ["gpus", "minutes", "seeds", "seed", "config_hash"],
+        # gated metrics check_regression diffs (lower is better): the
+        # headline pair plus the chaos sweep's per-cause blame shares,
+        # so a recovery-policy change that silently shifts violations
+        # from (say) retry_backoff to queue_wait flags the diff
+        "metrics": ["slo_violation_pct", "cost_usd"]
+        + [f"cause_{c}_pct" for c in _CAUSES + ("exec",)],
         "points": {},
     }
     rows = []
@@ -297,27 +322,44 @@ def run(quick: bool = False) -> Dict:
           + f" -> {word}")
 
     # -- chaos sweep: recovery postures under seeded fault schedules ----------
+    from repro.obs import CAUSES
+
     chaos_rows = []
+    chaos_forensics: Dict[str, Dict] = {}
     chaos_profiles = sorted(CHAOS_PROFILES)
     for profile in chaos_profiles:
         for mode in CHAOS_MODES:
             point = run_chaos_point(top, profile, mode,
                                     minutes=minutes, seeds=seeds)
+            # the full per-job report goes to the artifact, not the
+            # committed baseline (point totals keep the flat shares)
+            rep = point.pop("_forensics", None)
+            if rep is not None:
+                chaos_forensics[f"{profile}/{mode}"] = rep
             out["points"][f"chaos/{profile}/shards{top}/{mode}"] = point
             t = point["total"]
+            top_cause = max(CAUSES + ("exec",),
+                            key=lambda c: t.get(f"cause_{c}_pct", 0.0))
             chaos_rows.append([
                 profile, mode,
                 fmt(t["slo_violation_pct"], 1), fmt(t["cost_usd"]),
                 fmt(t["makespan_s"], 0), fmt(t["wall_clock_s"], 1),
                 int(round(t["crashes"] + t["preemptions"])),
                 int(round(t["retries"])), int(round(t["sheds"])),
+                f"{top_cause} {t.get(f'cause_{top_cause}_pct', 0.0):.0f}%",
             ])
     print()
     print(table(
         f"Chaos sweep @ {top} shards - recovery postures under "
         "identical fault schedules",
         ["profile", "mode", "viol %", "cost $", "mkspan", "wall s",
-         "faults", "retries", "shed"], chaos_rows))
+         "faults", "retries", "shed", "top blame"], chaos_rows))
+    os.makedirs(OBS_DIR, exist_ok=True)
+    forensics_path = os.path.join(OBS_DIR, "chaos.forensics.json")
+    with open(forensics_path, "w") as f:
+        json.dump(chaos_forensics, f, indent=1, default=float)
+    print(f"\nchaos forensics (per-job blame, seed {BASE_SEED}) -> "
+          f"{forensics_path}")
 
     # -- chaos verdict: failure-aware elastic vs restart-from-zero ------------
     per_profile = {}

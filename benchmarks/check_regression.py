@@ -54,7 +54,11 @@ def compare(baseline: Dict, fresh: Dict, threshold: float,
             f = fresh_pts[name].get(metric)
             if b is None or f is None:
                 continue
-            floor = ABS_FLOOR.get(metric, 0.0)
+            # per-cause blame shares are percentages of a noisy total:
+            # give them a 5-point absolute floor so a 0.2% -> 0.5%
+            # share move doesn't flag as a 150% regression
+            default_floor = 5.0 if metric.startswith("cause_") else 0.0
+            floor = ABS_FLOOR.get(metric, default_floor)
             if f > b * (1.0 + threshold) + floor * threshold:
                 regressions.append((name, metric, b, f))
     return regressions

@@ -20,6 +20,12 @@ policy's run, print the SLO-attainment time-series report, and export a
 Chrome-trace (open at https://ui.perfetto.dev) / structured JSONL for
 the *last* policy listed (use ``--policies prompttuner`` to pick one).
 
+``--alerts`` attaches the online :class:`repro.obs.AlertRules`
+evaluator (SLO burn-rate, queue-pressure, quarantine-count) and prints
+every fired/resolved alert; ``--forensics-out`` writes the
+per-violation blame-attribution report (why each violated or shed job
+missed its SLO) for the last policy.
+
 ``--chaos {crashes,preemptions,mixed}`` arms the fault plane with the
 named hazard profile, seeded from ``--seed`` so the injected crash /
 preemption / slowdown schedule is reproducible (and identical across
@@ -92,8 +98,16 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="record telemetry and write the structured JSONL "
                          "export (timelines + metric windows + audit)")
+    ap.add_argument("--alerts", action="store_true",
+                    help="attach the online alert evaluator (burn-rate / "
+                         "queue-pressure / quarantine rules); fired alerts "
+                         "print per policy and land in the audit export")
+    ap.add_argument("--forensics-out", default=None, metavar="PATH",
+                    help="write the per-violation blame-attribution report "
+                         "JSON for the last policy (implies telemetry)")
     args = ap.parse_args()
-    observe = args.trace_out is not None or args.metrics_out is not None
+    observe = (args.trace_out is not None or args.metrics_out is not None
+               or args.alerts or args.forensics_out is not None)
 
     elastic = None
     if args.elastic:
@@ -133,8 +147,9 @@ def main():
                             shards=args.shards, placement=args.placement,
                             elastic=elastic, faults=faults)
         if observe:
-            from repro.obs import Telemetry
-            tel = Telemetry().attach(fab)
+            from repro.obs import AlertRules, Telemetry
+            alerts = AlertRules() if args.alerts else None
+            tel = Telemetry(alerts=alerts).attach(fab)
         res = fab.run(clone_jobs(jobs))
         s = res.summary()
         extra = ""
@@ -156,6 +171,11 @@ def main():
         if tel is not None:
             print()
             print(tel.report(title=f"SLO attainment over time [{name}]"))
+            if tel.alerts is not None and tel.alerts.history:
+                print()
+                print(f"alerts [{name}]:")
+                for a in tel.alerts.history:
+                    print(f"  t={a.time:7.1f}s {a.kind:14s} {a.detail}")
             print()
     if tel is not None:
         # exports carry the last policy's run
@@ -164,6 +184,15 @@ def main():
                   "  (open at https://ui.perfetto.dev)")
         if args.metrics_out:
             print(f"jsonl export -> {tel.export_jsonl(args.metrics_out)}")
+        if args.forensics_out:
+            import json
+
+            rep = tel.forensics()
+            print()
+            print(rep.render())
+            with open(args.forensics_out, "w") as f:
+                json.dump(rep.to_dict(), f, indent=2, default=float)
+            print(f"forensics -> {args.forensics_out}")
     print("\n(prompttuner = warm/cold pools + Algorithms 1&2 + "
           "DelaySchedulable + Prompt Bank latency budget; per-tenant "
           "rows bill at the class price tier)")

@@ -306,3 +306,13 @@ class PromptTunerService:
             raise ValueError("no telemetry recorded: construct the service "
                              "with telemetry=True (or a Telemetry instance)")
         return self.telemetry.report(**kw)
+
+    def forensics_report(self):
+        """Per-violation blame attribution rolled up fleet-wide — a
+        :class:`repro.obs.forensics.ForensicsReport` answering *why*
+        each violated/shed job missed its SLO (requires
+        ``telemetry=``)."""
+        if self.telemetry is None:
+            raise ValueError("no telemetry recorded: construct the service "
+                             "with telemetry=True (or a Telemetry instance)")
+        return self.telemetry.forensics()

@@ -53,6 +53,14 @@ JOB_STOLEN = "job_stolen"          # a pending job migrated between shards
 JOB_REJECTED = "job_rejected"      # a submission bounced off a tenant quota
 SHARD_RESIZED = "shard_resized"    # autoscaler moved GPUs between shards
 
+# Alert lifecycle kinds, emitted onto the same stream by the obs-layer
+# AlertRules evaluator (repro.obs.alerts) via ``fabric.announce``. They
+# are defined here — not in obs — so the controller (and the future
+# SLO autotuner) can subscribe without a cluster->obs import cycle.
+# ``detail`` starts with the firing rule's name: ``"<rule>: <why>"``.
+ALERT_FIRED = "alert_fired"        # a rule's condition became true
+ALERT_RESOLVED = "alert_resolved"  # the condition cleared
+
 # Failure-aware audit action tags. Drains ride the job_stolen fabric
 # event and sheds the job_shed event; quarantine is pure controller
 # state, so it exists only in the audit log.
@@ -139,6 +147,9 @@ class ElasticController:
         # / rejection / reclaim records the ShardHealth inputs it acted
         # on, so control actions stay attributable to recorded signals.
         self.audit = None
+        # rule name -> fire time for alerts currently firing (populated
+        # only when an AlertRules evaluator is attached to the fabric)
+        self.active_alerts: Dict[str, float] = {}
         self._next_cycle_at = 0.0
         self._hot_streak: Dict[int, int] = {}
         self._last_resize: Dict[int, float] = {}
@@ -210,6 +221,17 @@ class ElasticController:
     # -- control loop ----------------------------------------------------------
 
     def _on_event(self, ev: EngineEvent) -> None:
+        if ev.kind in (ALERT_FIRED, ALERT_RESOLVED):
+            name = (ev.detail or "").split(":", 1)[0].strip()
+            if ev.kind == ALERT_FIRED:
+                self.active_alerts[name] = ev.time
+                # pressure relief: drop the interval gate so the very
+                # next ROUND runs a control cycle instead of waiting
+                # out the remainder of control_interval
+                self._next_cycle_at = min(self._next_cycle_at, ev.time)
+            else:
+                self.active_alerts.pop(name, None)
+            return
         if ev.kind != ROUND or self._in_cycle:
             return
         if ev.time < self._next_cycle_at:

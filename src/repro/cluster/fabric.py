@@ -207,6 +207,17 @@ class ClusterFabric:
         for cb in list(self._subscribers):
             cb(ev)
 
+    def announce(self, ev: EngineEvent) -> None:
+        """Inject an externally-built event into the fabric-wide stream
+        (delivered to every subscriber, exactly like an engine event).
+        This is how stream-derived evaluators — the obs-layer
+        ``AlertRules`` — publish typed ``alert_fired`` /
+        ``alert_resolved`` events back onto the same bus the controller
+        and telemetry already watch. ``_dispatch`` iterates a snapshot
+        of the subscriber list, so announcing from inside a subscriber
+        callback is safe."""
+        self._dispatch(ev)
+
     def on_event(self, cb: Callable[[EngineEvent], None]) -> None:
         """Subscribe to the fabric-wide event stream (globally time-
         ordered; each event's ``shard`` is the originating shard).

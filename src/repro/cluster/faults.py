@@ -257,11 +257,17 @@ class FaultPlane:
         elif kind == "slow":
             if shard not in self._down:
                 self.slowdowns += 1
+                # the factor rides in inputs so forensics can rebuild
+                # per-shard slowdown windows from the audit log alone
                 self._audit(t, SHARD_SLOWED, shard,
-                            detail=f"x{payload:g} step time")
+                            detail=f"x{payload:g} step time",
+                            inputs={"factor": payload})
                 self.fabric.slow_shard(shard, payload, t)
         elif kind == "unslow":
             if shard not in self._down:
+                self._audit(t, SHARD_SLOWED, shard,
+                            detail="x1 step time (cleared)",
+                            inputs={"factor": 1.0})
                 self.fabric.slow_shard(shard, 1.0, t)
         elif kind == "retry":
             self._fire_retry(payload, t)
@@ -357,7 +363,8 @@ class FaultPlane:
 
     def _audit(self, t: float, action: str, shard: int, *,
                job_id: Optional[int] = None, tenant: Optional[str] = None,
-               detail: str = "") -> None:
+               detail: str = "", inputs: Optional[Dict] = None) -> None:
         if self.audit is not None:
             self.audit.decision(time=t, action=action, shard=shard,
-                                job_id=job_id, tenant=tenant, detail=detail)
+                                job_id=job_id, tenant=tenant, detail=detail,
+                                inputs=inputs)

@@ -36,7 +36,13 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional
 
-from repro.cluster.elastic import JOB_REJECTED, JOB_STOLEN, SHARD_RESIZED
+from repro.cluster.elastic import (
+    ALERT_FIRED,
+    ALERT_RESOLVED,
+    JOB_REJECTED,
+    JOB_STOLEN,
+    SHARD_RESIZED,
+)
 from repro.cluster.engine import ARRIVAL, JOB_DONE, ROUND, EngineEvent
 from repro.cluster.faults import (
     JOB_ORPHANED,
@@ -49,6 +55,12 @@ from repro.cluster.faults import (
 )
 from repro.cluster.health import shard_health
 
+from repro.obs.alerts import (
+    DEFAULT_RULES,
+    AlertEvent,
+    AlertRule,
+    AlertRules,
+)
 from repro.obs.audit import AuditEntry, AuditLog, health_dict
 from repro.obs.export import (
     read_jsonl,
@@ -57,6 +69,12 @@ from repro.obs.export import (
     validate_chrome_trace_file,
     write_chrome_trace,
     write_jsonl,
+)
+from repro.obs.forensics import (
+    CAUSES,
+    ForensicsReport,
+    JobBlame,
+    analyze,
 )
 from repro.obs.metrics import (
     Counter,
@@ -69,11 +87,20 @@ from repro.obs.report import render_report, report_rows
 from repro.obs.spans import JobTimeline, ShardHop, Span, TimelineRecorder
 
 __all__ = [
+    "ALERT_FIRED",
+    "ALERT_RESOLVED",
+    "CAUSES",
+    "DEFAULT_RULES",
+    "AlertEvent",
+    "AlertRule",
+    "AlertRules",
     "AuditEntry",
     "AuditLog",
     "Counter",
+    "ForensicsReport",
     "Gauge",
     "Histogram",
+    "JobBlame",
     "JobTimeline",
     "MetricsRegistry",
     "ShardHop",
@@ -81,6 +108,7 @@ __all__ = [
     "Telemetry",
     "TimelineRecorder",
     "WindowSnapshot",
+    "analyze",
     "health_dict",
     "read_jsonl",
     "render_report",
@@ -100,10 +128,12 @@ class Telemetry:
     ``window`` is the metrics snapshot period in *simulated* seconds.
     """
 
-    def __init__(self, *, window: float = 60.0) -> None:
+    def __init__(self, *, window: float = 60.0,
+                 alerts: Optional[AlertRules] = None) -> None:
         self.metrics = MetricsRegistry(window=window)
         self.timeline = TimelineRecorder()
         self.audit = AuditLog()
+        self.alerts = alerts
         self._fabric = None
 
     # -- wiring --------------------------------------------------------------
@@ -123,6 +153,14 @@ class Telemetry:
         faults = getattr(fabric, "faults", None)
         if faults is not None:
             faults.audit = self.audit
+        if self.alerts is not None:
+            # subscribed AFTER telemetry: metric windows are captured
+            # before any rule reads them — the same visibility the
+            # offline replay reconstructs. Emissions go through
+            # fabric.announce so the controller sees them too.
+            self.alerts.bind(emit=fabric.announce, metrics=self.metrics,
+                             audit=self.audit)
+            fabric.on_event(self.alerts.on_event)
         return self
 
     @property
@@ -172,6 +210,15 @@ class Telemetry:
                                  tenant=ev.job.tenant).inc()
         elif kind == JOB_SHED:
             self.metrics.counter("jobs_shed", tenant=ev.job.tenant).inc()
+        elif kind == ALERT_FIRED or kind == ALERT_RESOLVED:
+            # alert transitions land in the audit log so they export as
+            # JSONL records and Chrome-trace instants with no extra
+            # wiring (the rule name leads the detail string)
+            self.metrics.counter(
+                "alerts_fired" if kind == ALERT_FIRED
+                else "alerts_resolved").inc()
+            self.audit.decision(time=ev.time, action=kind, shard=ev.shard,
+                                detail=ev.detail or "")
 
     def _sample_shard(self, shard: int) -> None:
         """ShardHealth pressure/slack signals as gauges, sampled each
@@ -240,6 +287,11 @@ class Telemetry:
         self.metrics.close()
         return write_jsonl(path, self.timeline, self.metrics, self.audit)
 
+    def forensics(self) -> ForensicsReport:
+        """Per-violation blame attribution rolled up fleet-wide (see
+        :mod:`repro.obs.forensics`)."""
+        return analyze(self.timeline, self.audit)
+
     def summary_counters(self) -> Dict[str, float]:
         """Cross-label totals of the headline counters (quick asserts
         and logs)."""
@@ -248,4 +300,5 @@ class Telemetry:
                              "slo_violations", "steals", "resizes",
                              "rejections", "rounds", "shard_failures",
                              "shard_recoveries", "jobs_orphaned",
-                             "jobs_retried", "jobs_shed")}
+                             "jobs_retried", "jobs_shed",
+                             "alerts_fired", "alerts_resolved")}

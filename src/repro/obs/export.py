@@ -118,14 +118,20 @@ def to_chrome_trace(
     ctl_pid = max(n_shards, max(seen_pids) + 1 if seen_pids else 0)
     if audit is not None:
         for e in audit.entries:
-            events.append({
+            ev = {
                 "name": e.action,
                 "cat": "elastic", "ph": "i", "s": "g",
                 "ts": e.time * _US, "pid": ctl_pid, "tid": 0,
                 "args": {"shard": e.shard, "job_id": e.job_id,
                          "tenant": e.tenant, "detail": e.detail,
                          "inputs": e.inputs},
-            })
+            }
+            # alert windows stand out: red firing, green resolution
+            if e.action == "alert_fired":
+                ev["cname"] = "bad"
+            elif e.action == "alert_resolved":
+                ev["cname"] = "good"
+            events.append(ev)
 
     meta: List[Dict] = []
     for pid in sorted(seen_pids):
@@ -300,17 +306,44 @@ def main(argv: Optional[List[str]] = None) -> int:
     import argparse
 
     ap = argparse.ArgumentParser(
-        description="validate a Chrome-trace export")
-    ap.add_argument("--validate", metavar="TRACE_JSON", required=True)
+        description="validate a Chrome-trace export / run SLO forensics "
+                    "on a JSONL export")
+    ap.add_argument("--validate", metavar="TRACE_JSON",
+                    help="schema-check a Chrome-trace JSON file")
+    ap.add_argument("--forensics", metavar="TRACE_JSONL",
+                    help="per-violation blame attribution from a JSONL "
+                         "export (timelines + audit)")
+    ap.add_argument("--forensics-out", metavar="OUT_JSON",
+                    help="also write the full forensics report (per-job "
+                         "breakdowns included) as JSON")
     args = ap.parse_args(argv)
-    problems = validate_chrome_trace_file(args.validate)
-    if problems:
-        print(f"{args.validate}: INVALID ({len(problems)} problems)")
-        for p in problems[:20]:
-            print(f"  - {p}")
-        return 1
-    print(f"{args.validate}: OK (well-formed Chrome trace)")
-    return 0
+    if not args.validate and not args.forensics:
+        ap.error("nothing to do: pass --validate and/or --forensics")
+    rc = 0
+    if args.validate:
+        problems = validate_chrome_trace_file(args.validate)
+        if problems:
+            print(f"{args.validate}: INVALID ({len(problems)} problems)")
+            for p in problems[:20]:
+                print(f"  - {p}")
+            rc = 1
+        else:
+            print(f"{args.validate}: OK (well-formed Chrome trace)")
+    if args.forensics:
+        from repro.obs.forensics import analyze
+
+        try:
+            loaded = read_jsonl(args.forensics)
+        except (OSError, json.JSONDecodeError, KeyError, ValueError) as e:
+            print(f"{args.forensics}: cannot load JSONL export: {e}")
+            return 1
+        report = analyze(loaded["timelines"], loaded["audit"])
+        print(report.render())
+        if args.forensics_out:
+            with open(args.forensics_out, "w") as f:
+                json.dump(report.to_dict(), f, indent=2, default=float)
+            print(f"wrote {args.forensics_out}")
+    return rc
 
 
 if __name__ == "__main__":

@@ -161,6 +161,9 @@ class Histogram:
             "min": self.min if self.count else 0.0,
             "max": self.max if self.count else 0.0,
             "mean": self.mean,
+            # base rides along so exported rows can reconstruct bucket
+            # upper bounds (base * 2**index) for offline quantiles
+            "base": self.base,
             "buckets": dict(sorted(self.buckets.items())),
         }
 

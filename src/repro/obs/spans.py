@@ -68,12 +68,16 @@ class Span:
 
 @dataclass(frozen=True)
 class ShardHop:
-    """One steal: the job left ``src`` for ``dst`` at ``time``."""
+    """One cross-shard move: the job left ``src`` for ``dst`` at
+    ``time``. ``kind`` distinguishes an elastic steal/drain from a
+    crash-driven retry re-placement — forensics blames them to
+    different causes (``steal_hop`` vs ``crash_rework``)."""
 
     job_id: int
     time: float
     src: int
     dst: int
+    kind: str = "steal"        # "steal" | "retry"
 
 
 @dataclass
@@ -137,7 +141,8 @@ class JobTimeline:
                        "start": s.start, "end": s.end,
                        "truncated": s.truncated}
                       for s in self.spans],
-            "hops": [{"time": h.time, "src": h.src, "dst": h.dst}
+            "hops": [{"time": h.time, "src": h.src, "dst": h.dst,
+                      "kind": h.kind}
                      for h in self.hops],
         }
 
@@ -159,7 +164,8 @@ class JobTimeline:
                          truncated=bool(s.get("truncated", False)))
                     for s in d["spans"]]
         tl.hops = [ShardHop(job_id=tl.job_id, time=float(h["time"]),
-                            src=int(h["src"]), dst=int(h["dst"]))
+                            src=int(h["src"]), dst=int(h["dst"]),
+                            kind=h.get("kind", "steal"))
                    for h in d["hops"]]
         return tl
 
@@ -282,7 +288,7 @@ class TimelineRecorder:
         src = tl.spans[-1].shard if tl.spans else -1
         if src != ev.shard:
             tl.hops.append(ShardHop(job_id=tl.job_id, time=ev.time, src=src,
-                                    dst=ev.shard))
+                                    dst=ev.shard, kind="retry"))
         tl.retries += 1
         tl.spans.append(Span(job_id=tl.job_id, phase=QUEUED, shard=ev.shard,
                              start=ev.time, end=None))
